@@ -1,0 +1,48 @@
+"""§Roofline: per (arch x shape x mesh) three-term table from the dry-run
+artifacts (artifacts/dryrun/<mesh>/<arch>__<shape>.json)."""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import List, Tuple
+
+ART = os.path.normpath(
+    os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+)
+
+
+def run() -> List[Tuple[str, float, str]]:
+    out = []
+    if not os.path.isdir(ART):
+        print("# no dry-run artifacts found; run repro.launch.dryrun --all first")
+        return [("bench_roofline", 0.0, "no-artifacts")]
+    print("mesh,arch,shape,GiB/chip,compute_ms,memory_ms,collective_ms,bound,"
+          "useful_flop_pct,mfu_pct")
+    for mesh_name in sorted(os.listdir(ART)):
+        mdir = os.path.join(ART, mesh_name)
+        if not os.path.isdir(mdir):
+            continue
+        for fn in sorted(os.listdir(mdir)):
+            if not fn.endswith(".json"):
+                continue
+            with open(os.path.join(mdir, fn)) as f:
+                d = json.load(f)
+            r = d["roofline"]
+            gib = d.get("per_device_bytes", 0) / 2**30
+            print(
+                f"{mesh_name},{d['arch']},{d['shape']},{gib:.2f},"
+                f"{r['compute_s']*1e3:.2f},{r['memory_s']*1e3:.2f},"
+                f"{r['collective_s']*1e3:.2f},{d['bound']},"
+                f"{100*r['useful_flop_fraction']:.0f},{100*r['mfu']:.2f}"
+            )
+            out.append((
+                f"roofline_{mesh_name}_{d['arch']}_{d['shape']}",
+                r["step_s"] * 1e6,
+                f"{d['bound']}-bound mfu={100*r['mfu']:.2f}%",
+            ))
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,36 @@
+"""Benchmark aggregator: one section per paper table + roofline.
+
+    PYTHONPATH=src python -m benchmarks.run
+
+Prints ``name,us_per_call,derived`` CSV rows per bench, as required.
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import bench_overhead, bench_patterns, bench_roofline, bench_speedup
+
+    rows = []
+    for name, mod in (
+        ("patterns (paper Table I)", bench_patterns),
+        ("overhead (paper Table II)", bench_overhead),
+        ("speedup (paper Table III)", bench_speedup),
+        ("roofline (§Roofline)", bench_roofline),
+    ):
+        print(f"\n===== {name} =====")
+        try:
+            rows.extend(mod.run())
+        except Exception as e:  # noqa: BLE001 — keep the suite going
+            print(f"# FAILED: {e!r}")
+            rows.append((name, 0.0, f"FAILED {e!r}"))
+
+    print("\n===== summary: name,us_per_call,derived =====")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Long-context serving with an O(1)-state SSM (the `long_500k` story).
+
+A mamba2-family model decodes with CONSTANT per-token state — no KV
+cache growth — which is why the assignment's `long_500k` cell runs for
+the SSM/hybrid archs and is skipped for full attention.  This demo
+decodes after prefills of increasing length and shows the per-token
+decode cost staying flat while a GQA baseline's cache (and per-token
+read) grows linearly.
+
+    PYTHONPATH=src python examples/serve_long_context.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import ModelConfig, build_model
+
+
+def bench_decode(model, params, prompt_len, n_tokens=8, max_seq=2048):
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, 256, size=(1, prompt_len)).astype(np.int32)
+    caches = model.init_caches(1, max_seq, dtype=jnp.float32)
+    lg, caches = jax.block_until_ready(
+        model.prefill(params, jnp.asarray(prompt), caches)
+    )
+    step = jax.jit(model.decode_step)
+    tok = jnp.argmax(lg[:, -1:], axis=-1).astype(jnp.int32)
+    lg2, caches = step(params, tok, caches)  # compile
+    t0 = time.perf_counter()
+    for _ in range(n_tokens):
+        lg2, caches = step(params, tok, caches)
+    jax.block_until_ready(lg2)
+    per_tok = (time.perf_counter() - t0) / n_tokens
+    # cache bytes actually held
+    cache_bytes = sum(
+        np.prod(a.shape) * a.dtype.itemsize for a in jax.tree.leaves(caches)
+    )
+    return per_tok * 1e3, cache_bytes / 2**20
+
+
+def main() -> None:
+    ssm = ModelConfig(name="ssm", family="ssm", n_layers=4, d_model=128,
+                      n_heads=1, n_kv_heads=1, d_ff=0, vocab=256,
+                      ssm_state=16, ssm_head_dim=32, ssm_chunk=64,
+                      dtype=jnp.float32)
+    gqa = ModelConfig(name="gqa", family="dense", n_layers=4, d_model=128,
+                      n_heads=8, n_kv_heads=4, d_ff=256, vocab=256,
+                      dtype=jnp.float32)
+    m_ssm = build_model(ssm)
+    m_gqa = build_model(gqa)
+    p_ssm = m_ssm.init(jax.random.key(0))
+    p_gqa = m_gqa.init(jax.random.key(0))
+
+    print(f"{'prefill':>8} | {'SSM ms/tok':>10} {'SSM cacheMB':>11} | "
+          f"{'GQA ms/tok':>10} {'GQA cacheMB':>11}")
+    for plen in (128, 512, 1536):
+        s_ms, s_mb = bench_decode(m_ssm, p_ssm, plen)
+        g_ms, g_mb = bench_decode(m_gqa, p_gqa, plen)
+        print(f"{plen:>8} | {s_ms:>10.2f} {s_mb:>11.2f} | "
+              f"{g_ms:>10.2f} {g_mb:>11.2f}")
+    print("\nSSM state is constant in sequence length (the long_500k cell "
+          "decodes 524k context with a few MB of state); the GQA cache "
+          "grows linearly and its decode reads the whole cache per token.")
+
+
+if __name__ == "__main__":
+    main()

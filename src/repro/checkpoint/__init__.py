@@ -1,0 +1,5 @@
+"""repro.checkpoint — atomic, async, elastic npz-shard checkpoints."""
+
+from .manager import CheckpointManager, restore_tree, save_tree
+
+__all__ = ["CheckpointManager", "restore_tree", "save_tree"]

@@ -1,0 +1,198 @@
+"""Checkpointing: atomic npz shards + manifest, async writes, elastic restore.
+
+Layout (one directory per step):
+
+    ckpt_dir/step_000100/
+        manifest.json     # step, tree structure, shapes/dtypes, hashes, mesh
+        shard_h0.npz      # this host's leaves (full logical arrays on 1 host)
+        COMMITTED         # sentinel written last (atomic-rename discipline)
+
+Fault-tolerance properties:
+  * writes go to ``step_X.tmp`` then ``os.rename`` -> a crash mid-write
+    never corrupts the latest checkpoint;
+  * an async writer thread overlaps serialization with training compute —
+    ``wait()`` is called before the next save or at exit;
+  * ``restore`` verifies per-leaf SHA-256 and the manifest step;
+  * ELASTIC: arrays are stored as full logical values; restore re-shards
+    onto whatever mesh/sharding the *current* run uses (chip count may
+    differ — N->M restart), via ``jax.device_put(leaf, new_sharding)``;
+  * ``keep_n`` garbage-collects old steps, never the newest COMMITTED one.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+def _flatten_with_names(tree: PyTree) -> List[Tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path
+        )
+        out.append((name, leaf))
+    return out
+
+
+def _sha(arr: np.ndarray) -> str:
+    return hashlib.sha256(np.ascontiguousarray(arr).tobytes()).hexdigest()[:16]
+
+
+def save_tree(tree: PyTree, directory: str, step: int, extra: Optional[Dict] = None) -> str:
+    """Synchronous atomic save of a pytree. Returns the final path."""
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    named = _flatten_with_names(tree)
+    arrays = {}
+    manifest: Dict[str, Any] = {"step": step, "leaves": {}, "extra": extra or {}}
+    for name, leaf in named:
+        arr = np.asarray(jax.device_get(leaf))
+        key = name.replace("/", "__")
+        arrays[key] = arr
+        manifest["leaves"][name] = {
+            "shape": list(arr.shape),
+            "dtype": str(arr.dtype),
+            "sha": _sha(arr),
+            "key": key,
+        }
+    np.savez(os.path.join(tmp, "shard_h0.npz"), **arrays)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    with open(os.path.join(tmp, "COMMITTED"), "w") as f:
+        f.write("ok")
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def restore_tree(
+    directory: str,
+    target: PyTree,
+    step: Optional[int] = None,
+    shardings: Optional[PyTree] = None,
+    verify: bool = True,
+) -> Tuple[PyTree, int, Dict]:
+    """Restore into the structure of ``target`` (arrays or ShapeDtypeStructs).
+
+    ``shardings`` (optional tree of NamedSharding) re-shards each leaf for
+    the CURRENT mesh — the elastic-restart path.
+    """
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    if not os.path.exists(os.path.join(path, "COMMITTED")):
+        raise FileNotFoundError(f"checkpoint {path} not committed")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    with np.load(os.path.join(path, "shard_h0.npz")) as z:
+        arrays = {k: z[k] for k in z.files}
+
+    named = _flatten_with_names(target)
+    flat_sh = (
+        [s for _, s in _flatten_with_names(shardings)] if shardings is not None else None
+    )
+    leaves = []
+    for i, (name, tgt) in enumerate(named):
+        meta = manifest["leaves"].get(name)
+        if meta is None:
+            raise KeyError(f"leaf {name} missing from checkpoint")
+        arr = arrays[meta["key"]]
+        if verify and _sha(arr) != meta["sha"]:
+            raise IOError(f"hash mismatch for {name}")
+        if tuple(arr.shape) != tuple(tgt.shape):
+            raise ValueError(
+                f"shape mismatch for {name}: ckpt {arr.shape} vs target {tgt.shape}"
+            )
+        arr = arr.astype(tgt.dtype)
+        if flat_sh is not None:
+            leaves.append(jax.device_put(arr, flat_sh[i]))
+        else:
+            leaves.append(jax.numpy.asarray(arr))
+    treedef = jax.tree_util.tree_structure(target)
+    return jax.tree_util.tree_unflatten(treedef, leaves), step, manifest["extra"]
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for d in os.listdir(directory):
+        if d.startswith("step_") and not d.endswith(".tmp"):
+            if os.path.exists(os.path.join(directory, d, "COMMITTED")):
+                steps.append(int(d.split("_")[1]))
+    return max(steps) if steps else None
+
+
+class CheckpointManager:
+    """Async keep-N checkpoint manager."""
+
+    def __init__(self, directory: str, keep_n: int = 3):
+        self.directory = directory
+        self.keep_n = keep_n
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        os.makedirs(directory, exist_ok=True)
+
+    def save(self, tree: PyTree, step: int, extra: Optional[Dict] = None,
+             blocking: bool = False) -> None:
+        self.wait()
+        # device_get on the main thread (arrays may be donated right after)
+        host_tree = jax.tree.map(lambda a: np.asarray(jax.device_get(a)), tree)
+
+        def work():
+            try:
+                save_tree(host_tree, self.directory, step, extra)
+                self._gc()
+            except BaseException as e:  # surfaced by wait()
+                self._error = e
+
+        if blocking:
+            work()
+            if self._error:
+                raise self._error
+        else:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def restore(self, target: PyTree, shardings: Optional[PyTree] = None,
+                step: Optional[int] = None):
+        return restore_tree(self.directory, target, step, shardings)
+
+    def latest_step(self) -> Optional[int]:
+        return latest_step(self.directory)
+
+    def _gc(self) -> None:
+        steps = sorted(
+            int(d.split("_")[1])
+            for d in os.listdir(self.directory)
+            if d.startswith("step_") and not d.endswith(".tmp")
+            and os.path.exists(os.path.join(self.directory, d, "COMMITTED"))
+        )
+        for s in steps[: -self.keep_n] if self.keep_n > 0 else []:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"))

@@ -1,0 +1,17 @@
+"""repro.configs — assigned architectures x shapes registry."""
+
+from .archs import FULL, SMOKE, get_config
+from .base import ARCH_IDS, SHAPES, SUBQUADRATIC, Shape, all_cells, cells, skipped_cells
+
+__all__ = [
+    "ARCH_IDS",
+    "FULL",
+    "SHAPES",
+    "SMOKE",
+    "SUBQUADRATIC",
+    "Shape",
+    "all_cells",
+    "cells",
+    "get_config",
+    "skipped_cells",
+]

@@ -1,0 +1,60 @@
+"""repro.core — the CUTHERMO reproduction: TPU memory heat-map profiling.
+
+Levels:
+  1. ``collector`` — BlockSpec/grid walker (static-exact HBM<->VMEM map)
+  2. ``collector.drain_dynamic`` — in-kernel trace buffers for gathers
+  3. ``hlo_thermo`` — distributed (compiled-HLO) heat + collective bytes
+
+Public API lives in ``repro.core.api`` (also re-exported here).
+"""
+
+from . import advisor, api, collector, diff as diff_mod, heatmap, hlo_cost
+from . import hlo_thermo, patterns, render, roofline, tiles, trace
+from .diff import HeatmapDiff, diff
+from .api import (
+    actions,
+    advise,
+    detect_all,
+    format_report,
+    heatmap as heatmap_of,
+    patterns as patterns_of,
+    report,
+)
+from .collector import KernelSpec, OperandSpec, ScratchSpec, analyze, collect
+from .heatmap import Analyzer, Heatmap
+from .patterns import PatternReport
+from .trace import GridSampler, KernelWhitelist, TraceBuffer
+
+__all__ = [
+    "Analyzer",
+    "GridSampler",
+    "Heatmap",
+    "HeatmapDiff",
+    "diff",
+    "hlo_cost",
+    "KernelSpec",
+    "KernelWhitelist",
+    "OperandSpec",
+    "PatternReport",
+    "ScratchSpec",
+    "TraceBuffer",
+    "actions",
+    "advise",
+    "advisor",
+    "analyze",
+    "api",
+    "collect",
+    "collector",
+    "detect_all",
+    "format_report",
+    "heatmap",
+    "heatmap_of",
+    "hlo_thermo",
+    "patterns",
+    "patterns_of",
+    "render",
+    "report",
+    "roofline",
+    "tiles",
+    "trace",
+]

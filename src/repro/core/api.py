@@ -1,0 +1,80 @@
+"""Public profiling API: the paper's workflow as three calls.
+
+    spec = my_kernel.kernel_spec(args...)          # from kernels/*
+    hm   = thermo.heatmap(spec)                    # collect + analyze
+    print(thermo.report(spec))                     # patterns + advice
+
+plus ``profile_step`` for Level-3 (distributed HLO) profiling of whole
+jitted train/serve steps.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from . import hlo_thermo
+from .advisor import Action, advise, format_report
+from .collector import KernelSpec, analyze, collect
+from .heatmap import Heatmap
+from .patterns import PatternReport, detect_all, patterns_by_region
+from .render import render_ascii, render_csv, render_html, save
+from .trace import GridSampler, KernelWhitelist
+
+
+def heatmap(
+    spec: KernelSpec,
+    sampler: Optional[GridSampler] = None,
+    dynamic_context: Optional[Dict[str, np.ndarray]] = None,
+) -> Heatmap:
+    return analyze(spec, sampler=sampler, dynamic_context=dynamic_context)
+
+
+def patterns(
+    spec: KernelSpec,
+    sampler: Optional[GridSampler] = None,
+    dynamic_context: Optional[Dict[str, np.ndarray]] = None,
+) -> List[PatternReport]:
+    return detect_all(heatmap(spec, sampler, dynamic_context))
+
+
+def actions(
+    spec: KernelSpec,
+    sampler: Optional[GridSampler] = None,
+    dynamic_context: Optional[Dict[str, np.ndarray]] = None,
+) -> List[Action]:
+    return advise(heatmap(spec, sampler, dynamic_context))
+
+
+def report(
+    spec: KernelSpec,
+    sampler: Optional[GridSampler] = None,
+    dynamic_context: Optional[Dict[str, np.ndarray]] = None,
+) -> str:
+    return format_report(heatmap(spec, sampler, dynamic_context))
+
+
+__all__ = [
+    "Action",
+    "GridSampler",
+    "Heatmap",
+    "KernelSpec",
+    "KernelWhitelist",
+    "PatternReport",
+    "actions",
+    "advise",
+    "analyze",
+    "collect",
+    "detect_all",
+    "format_report",
+    "heatmap",
+    "hlo_thermo",
+    "patterns",
+    "patterns_by_region",
+    "render_ascii",
+    "render_csv",
+    "render_html",
+    "report",
+    "save",
+]

@@ -1,0 +1,286 @@
+"""Trace collectors: Level 1 (BlockSpec walker) and Level 2 (in-kernel).
+
+Level 1 — the NVBit analogue for TPU.  On GPU, memory transactions are
+only observable at runtime, hence binary instrumentation.  On TPU the
+HBM<->VMEM transfer schedule of a ``pallas_call`` is *static*: it is
+fully determined by (grid, BlockSpec.index_map, block_shape).  The
+collector therefore "instruments" a kernel by evaluating every operand's
+``index_map`` for every sampled grid program — an exact, zero-overhead
+reconstruction of the transfers the hardware will issue.
+
+Level 2 — for data-dependent addressing (gathers/scatters), where the
+BlockSpec view is incomplete, kernels compiled with ``trace=True`` write
+touched indices into an extra output buffer (CUTHERMO's GPU-queue trace
+packer, realized as a normal kernel output).  ``drain_dynamic`` converts
+the concrete index arrays into trace records.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .heatmap import Analyzer, Heatmap
+from .tiles import TileGeometry, block_to_2d
+from .trace import (
+    AccessRecord,
+    GridSampler,
+    RegionInfo,
+    TraceBuffer,
+    sampled_grid,
+)
+
+IndexMap = Callable[..., Tuple[int, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class OperandSpec:
+    """Describes one pallas_call operand for the Level-1 walker."""
+
+    name: str
+    shape: Tuple[int, ...]
+    dtype: np.dtype
+    block_shape: Tuple[int, ...]
+    index_map: IndexMap
+    kind: str = "load"  # 'load' | 'store' | 'accum'
+    space: str = "hbm"  # 'hbm' | 'vmem_scratch'
+    # element offset of the array's origin inside its backing buffer —
+    # models misaligned sub-array views (SpMV rowOffsets[r+1] analogue)
+    origin: Tuple[int, int] = (0, 0)
+    # True when the kernel touches this operand from ONE program only
+    # (e.g. a pl.when(last)-guarded final store of a scratch accumulator)
+    once: bool = False
+
+    @property
+    def geometry(self) -> TileGeometry:
+        return TileGeometry(
+            shape=self.shape, itemsize=np.dtype(self.dtype).itemsize, name=self.name
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ScratchSpec:
+    """User-managed VMEM scratch (the SMEM analogue) with an access model.
+
+    ``access_model(program_id)`` returns (row_start, row_stop, col_start,
+    col_stop) slices the program touches, or None for "whole buffer".
+    """
+
+    name: str
+    shape: Tuple[int, ...]
+    dtype: np.dtype
+    access_model: Optional[Callable[..., Iterable[Tuple[int, int, int, int]]]] = None
+    kind: str = "accum"
+
+    @property
+    def geometry(self) -> TileGeometry:
+        return TileGeometry(
+            shape=self.shape, itemsize=np.dtype(self.dtype).itemsize, name=self.name
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    """Everything the Level-1 walker needs about one kernel launch."""
+
+    name: str
+    grid: Tuple[int, ...]
+    operands: Tuple[OperandSpec, ...]
+    scratch: Tuple[ScratchSpec, ...] = ()
+    # optional dynamic access models keyed by operand name:
+    # fn(program_id, **context_arrays) -> iterable of flat element indices
+    dynamic: Tuple[Tuple[str, Callable[..., Iterable[int]]], ...] = ()
+
+
+@dataclasses.dataclass
+class CollectStats:
+    records: int = 0
+    programs: int = 0
+    wall_s: float = 0.0
+
+
+def _touches_for_block(
+    spec: OperandSpec, program_id: Tuple[int, ...]
+) -> Tuple[Tuple[int, int], ...]:
+    idx = spec.index_map(*program_id)
+    if isinstance(idx, int):
+        idx = (idx,)
+    geom = TileGeometry(
+        shape=spec.shape, itemsize=np.dtype(spec.dtype).itemsize, name=spec.name
+    )
+    if len(spec.shape) == 1:
+        # 1-D operand: a contiguous element run walking (1,128) lane rows.
+        # origin[1] models a misaligned view (e.g. rowOffsets shifted by +1).
+        start = int(idx[0]) * int(spec.block_shape[-1]) + spec.origin[1]
+        return tuple(geom.run_to_touches(start, start + int(spec.block_shape[-1])))
+    r0, r1, c0, c1 = block_to_2d(spec.shape, idx, spec.block_shape)
+    orow, ocol = spec.origin
+    return tuple(geom.slice_to_touches(r0 + orow, r1 + orow, c0 + ocol, c1 + ocol))
+
+
+def collect(
+    kernel: KernelSpec,
+    sampler: Optional[GridSampler] = None,
+    dynamic_context: Optional[Dict[str, np.ndarray]] = None,
+    max_records: int = 2_000_000,
+) -> Tuple[TraceBuffer, CollectStats]:
+    """Level-1 collection: walk the sampled grid and record every transfer."""
+    sampler = sampler or GridSampler()
+    buf = TraceBuffer(max_records=max_records)
+    stats = CollectStats()
+    t0 = time.perf_counter()
+
+    for op in kernel.operands:
+        buf.register_region(RegionInfo(op.name, op.geometry, space=op.space))
+    for sc in kernel.scratch:
+        buf.register_region(
+            RegionInfo(sc.name, sc.geometry, space="vmem_scratch")
+        )
+    dynamic_names = {name for name, _ in kernel.dynamic}
+    dyn_fns = dict(kernel.dynamic)
+
+    # memoize index_map -> touches: many programs map to the same block
+    touch_cache: Dict[Tuple[str, Tuple[int, ...]], Tuple[Tuple[int, int], ...]] = {}
+
+    first_pid = True
+    for pid in sampled_grid(kernel.grid, sampler):
+        stats.programs += 1
+        for op in kernel.operands:
+            if op.name in dynamic_names:
+                continue  # handled below with concrete indices
+            if op.once and not first_pid:
+                continue
+            idx = op.index_map(*pid)
+            if isinstance(idx, int):
+                idx = (idx,)
+            key = (op.name, tuple(int(i) for i in idx))
+            touches = touch_cache.get(key)
+            if touches is None:
+                touches = _touches_for_block(op, pid)
+                touch_cache[key] = touches
+            buf.append(
+                AccessRecord(
+                    array=op.name,
+                    site=f"{kernel.name}/{op.name}",
+                    space=op.space,
+                    kind=op.kind,
+                    program_id=pid,
+                    touches=touches,
+                )
+            )
+        for sc in kernel.scratch:
+            geom = sc.geometry
+            slices: Iterable[Tuple[int, int, int, int]]
+            if sc.access_model is None:
+                r, c = geom.shape2d
+                slices = [(0, r, 0, c)]
+            else:
+                slices = sc.access_model(pid)
+            touches_list: List[Tuple[int, int]] = []
+            for r0, r1, c0, c1 in slices:
+                touches_list.extend(geom.slice_to_touches(r0, r1, c0, c1))
+            buf.append(
+                AccessRecord(
+                    array=sc.name,
+                    site=f"{kernel.name}/{sc.name}",
+                    space="vmem_scratch",
+                    kind=sc.kind,
+                    program_id=pid,
+                    touches=tuple(touches_list),
+                )
+            )
+        # dynamic operands: concrete per-program indices
+        for op in kernel.operands:
+            fn = dyn_fns.get(op.name)
+            if fn is None:
+                continue
+            ctx = dynamic_context or {}
+            flat_idx = np.asarray(list(fn(pid, **ctx)), dtype=np.int64)
+            geom = op.geometry
+            rows, cols = geom.shape2d
+            touches_set = set()
+            for fi in flat_idx:
+                r, c = divmod(int(fi), cols) if cols else (0, 0)
+                r += op.origin[0]
+                c += op.origin[1]
+                touches_set.add((geom.sector_tag(r, c), geom.word_offset(r, c)))
+            buf.append(
+                AccessRecord(
+                    array=op.name,
+                    site=f"{kernel.name}/{op.name}",
+                    space=op.space,
+                    kind=op.kind,
+                    program_id=pid,
+                    touches=tuple(sorted(touches_set)),
+                )
+            )
+        first_pid = False
+    stats.records = len(buf)
+    stats.wall_s = time.perf_counter() - t0
+    return buf, stats
+
+
+def analyze(
+    kernel: KernelSpec,
+    sampler: Optional[GridSampler] = None,
+    dynamic_context: Optional[Dict[str, np.ndarray]] = None,
+) -> Heatmap:
+    """collect + drain + flush in one call (the common path)."""
+    sampler = sampler or GridSampler()
+    buf, _ = collect(kernel, sampler, dynamic_context)
+    an = Analyzer(kernel.name, kernel.grid, sampler.describe())
+    an.ingest(buf)
+    return an.flush()
+
+
+# ---------------------------------------------------------------------------
+# Level 2: drain an in-kernel trace buffer (concrete indices from a real run)
+# ---------------------------------------------------------------------------
+
+def drain_dynamic(
+    kernel_name: str,
+    grid: Sequence[int],
+    operand: OperandSpec,
+    index_trace: np.ndarray,
+    sampler: Optional[GridSampler] = None,
+    valid_mask: Optional[np.ndarray] = None,
+) -> TraceBuffer:
+    """Convert an in-kernel index trace into records.
+
+    ``index_trace`` has shape (n_programs, k): flat element indices written
+    by the instrumented kernel (one row per grid program, row-major grid
+    order); negative entries (or masked-out ones) are padding.
+    """
+    sampler = sampler or GridSampler()
+    grid = tuple(int(g) for g in grid)
+    buf = TraceBuffer()
+    buf.register_region(
+        RegionInfo(operand.name, operand.geometry, space=operand.space)
+    )
+    geom = operand.geometry
+    rows, cols = geom.shape2d
+    flat_pids = list(sampled_grid(grid, sampler))
+    for pid in flat_pids:
+        lin = int(np.ravel_multi_index(pid, grid)) if grid else 0
+        row = np.asarray(index_trace[lin])
+        if valid_mask is not None:
+            row = row[np.asarray(valid_mask[lin])]
+        row = row[row >= 0]
+        touches = set()
+        for fi in row:
+            r, c = divmod(int(fi), cols) if cols else (0, 0)
+            touches.add((geom.sector_tag(r, c), geom.word_offset(r, c)))
+        buf.append(
+            AccessRecord(
+                array=operand.name,
+                site=f"{kernel_name}/{operand.name}#trace",
+                space=operand.space,
+                kind=operand.kind,
+                program_id=pid,
+                touches=tuple(sorted(touches)),
+            )
+        )
+    return buf

@@ -1,0 +1,258 @@
+"""Analyzer: builds the word-sector heat map from trace records.
+
+This is a faithful port of CUTHERMO's Analyzer (§IV-B2):
+
+* ``sector_history_map`` maps a sector tag to a ``words+1``-slot array of
+  *bitmasks of distinct contributor ids*.  Slots ``0..words-1`` are the
+  per-word (sublane-row) masks; the last slot is the whole-sector mask.
+  CUTHERMO uses ``size_t[9]`` because warp ids are < 64; our grid-program
+  ids are unbounded, so the masks are arbitrary-precision Python ints and
+  the update is literally the paper's ``mask |= 1 << id``.
+* ``flush`` popcounts every mask into *temperatures* (distinct-contributor
+  counts) — the heat map proper — organized per region.
+
+Invariants (property-tested):
+  * sector mask == OR of its word masks (sector temp >= every word temp)
+  * temperatures are bounded by the number of sampled programs
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .tiles import TileGeometry
+from .trace import AccessRecord, RegionInfo, TraceBuffer, linearize
+
+
+@dataclasses.dataclass
+class SectorHistory:
+    """Bitmask history for one sector: per-word masks + whole-sector mask."""
+
+    words: int
+    word_masks: List[int] = dataclasses.field(default_factory=list)
+    sector_mask: int = 0
+
+    def __post_init__(self) -> None:
+        if not self.word_masks:
+            self.word_masks = [0] * self.words
+
+    def update(self, word_offset: int, contributor: int) -> None:
+        bit = 1 << contributor
+        self.word_masks[word_offset] |= bit
+        self.sector_mask |= bit
+
+    def word_temps(self) -> List[int]:
+        return [m.bit_count() for m in self.word_masks]
+
+    def sector_temp(self) -> int:
+        return self.sector_mask.bit_count()
+
+
+@dataclasses.dataclass(frozen=True)
+class HeatRow:
+    """One flushed heat-map row: a sector and its temperatures."""
+
+    region: str
+    tag: int
+    word_temps: Tuple[int, ...]
+    sector_temp: int
+
+    @property
+    def signature(self) -> Tuple[int, ...]:
+        """Pattern signature used for row compression (Fig. 4)."""
+        return self.word_temps + (self.sector_temp,)
+
+
+@dataclasses.dataclass(frozen=True)
+class RegionHeatmap:
+    """Flushed heat map of one memory region."""
+
+    region: RegionInfo
+    rows: Tuple[HeatRow, ...]
+    n_programs: int  # sampled contributor count (temperature upper bound)
+
+    @property
+    def max_sector_temp(self) -> int:
+        return max((r.sector_temp for r in self.rows), default=0)
+
+    @property
+    def touched_sectors(self) -> int:
+        return len(self.rows)
+
+    def words_per_sector(self) -> int:
+        return self.region.geometry.sublanes
+
+    def valid_words(self, tag: int) -> int:
+        """Words of this sector that actually exist (edge tiles of arrays
+        whose sublane extent is not a tile multiple have fewer)."""
+        geom = self.region.geometry
+        rows = geom.shape2d[0]
+        row0, _ = geom.tag_to_coords(tag)
+        return max(1, min(geom.sublanes, rows - row0))
+
+    def touched_word_fraction(self) -> float:
+        """Fraction of words touched inside touched sectors (waste gauge)."""
+        if not self.rows:
+            return 0.0
+        total = len(self.rows) * self.words_per_sector()
+        touched = sum(1 for r in self.rows for t in r.word_temps if t > 0)
+        return touched / total
+
+
+@dataclasses.dataclass(frozen=True)
+class Heatmap:
+    """The full heat map of one profiled kernel."""
+
+    kernel: str
+    grid: Tuple[int, ...]
+    sampler: str
+    regions: Tuple[RegionHeatmap, ...]
+    n_records: int
+    dropped: int
+
+    def region(self, name: str) -> RegionHeatmap:
+        for r in self.regions:
+            if r.region.name == name:
+                return r
+        raise KeyError(name)
+
+    def region_names(self) -> List[str]:
+        return [r.region.name for r in self.regions]
+
+    # -- transaction model --------------------------------------------------
+    def _tx_regions(self, region: Optional[str]) -> Tuple[RegionHeatmap, ...]:
+        if region is not None:
+            return (self.region(region),)
+        # only HBM-space regions move across the HBM<->VMEM boundary
+        return tuple(r for r in self.regions if r.region.space == "hbm")
+
+    def sector_transactions(self, region: Optional[str] = None) -> int:
+        """Modeled HBM<->VMEM memory transactions: sum of sector temps.
+
+        Each distinct contributor of a sector must move that sector across
+        the HBM<->VMEM boundary once (absent cross-program reuse, which the
+        Pallas pipeline does not provide between non-adjacent programs).
+        This is the paper's "8 sector transactions for false sharing vs 1
+        for coalesced" arithmetic, generalized.  VMEM scratch regions are
+        excluded (they never cross the HBM boundary).
+        """
+        regs = self._tx_regions(region)
+        return sum(r.sector_temp for rh in regs for r in rh.rows)
+
+    def useful_word_transactions(self, region: Optional[str] = None) -> int:
+        """Word-granularity demand: sum of word temps (what software asked)."""
+        regs = self._tx_regions(region)
+        return sum(t for rh in regs for r in rh.rows for t in r.word_temps)
+
+    def waste_ratio(self, region: Optional[str] = None) -> float:
+        """Moved words / demanded words (>= 1; 1.0 is perfect)."""
+        demanded = self.useful_word_transactions(region)
+        if demanded == 0:
+            return 1.0
+        regs = self._tx_regions(region)
+        wps = {rh.region.name: rh.words_per_sector() for rh in regs}
+        moved = sum(
+            r.sector_temp * wps[r.region] for rh in regs for r in rh.rows
+        )
+        return moved / demanded
+
+
+class Analyzer:
+    """Drains a TraceBuffer into sector_history_maps and flushes heat maps."""
+
+    def __init__(self, kernel: str, grid: Sequence[int], sampler_desc: str):
+        self.kernel = kernel
+        self.grid = tuple(int(g) for g in grid)
+        self.sampler_desc = sampler_desc
+        # region name -> {tag -> SectorHistory}
+        self._maps: Dict[str, Dict[int, SectorHistory]] = {}
+        self._regions: Dict[str, RegionInfo] = {}
+        self._contributors: Dict[str, set] = {}
+        self._n_records = 0
+        self._dropped = 0
+
+    # -- ingestion -----------------------------------------------------------
+    def ingest(self, buf: TraceBuffer) -> None:
+        for region in buf.regions.values():
+            self._regions.setdefault(region.name, region)
+            self._maps.setdefault(region.name, {})
+            self._contributors.setdefault(region.name, set())
+        for rec in buf.records:
+            self._ingest_record(rec)
+        self._dropped += buf.dropped
+
+    def _ingest_record(self, rec: AccessRecord) -> None:
+        self._n_records += 1
+        smap = self._maps.setdefault(rec.array, {})
+        region = self._regions.get(rec.array)
+        words = region.geometry.sublanes if region else 8
+        pid = linearize(rec.program_id, self.grid)
+        self._contributors.setdefault(rec.array, set()).add(pid)
+        for tag, woff in rec.touches:
+            hist = smap.get(tag)
+            if hist is None:
+                hist = SectorHistory(words=words)
+                smap[tag] = hist
+            hist.update(woff, pid)
+
+    # -- flush ----------------------------------------------------------------
+    def flush(self) -> Heatmap:
+        region_maps: List[RegionHeatmap] = []
+        for name, smap in sorted(self._maps.items()):
+            region = self._regions.get(name)
+            if region is None:
+                # unregistered region: synthesize a geometry stub
+                region = RegionInfo(
+                    name=name,
+                    geometry=TileGeometry(shape=(8, 128), itemsize=4, name=name),
+                )
+            rows = tuple(
+                HeatRow(
+                    region=name,
+                    tag=tag,
+                    word_temps=tuple(h.word_temps()),
+                    sector_temp=h.sector_temp(),
+                )
+                for tag, h in sorted(smap.items())
+            )
+            region_maps.append(
+                RegionHeatmap(
+                    region=region,
+                    rows=rows,
+                    n_programs=len(self._contributors.get(name, ())),
+                )
+            )
+        return Heatmap(
+            kernel=self.kernel,
+            grid=self.grid,
+            sampler=self.sampler_desc,
+            regions=tuple(region_maps),
+            n_records=self._n_records,
+            dropped=self._dropped,
+        )
+
+
+def compress_rows(
+    rows: Sequence[HeatRow],
+) -> List[Tuple[HeatRow, int]]:
+    """Group consecutive rows with identical signatures (Fig. 4 compression).
+
+    Returns (representative_row, repetition_count) pairs; consecutive means
+    consecutive sector tags AND identical temperature signatures.  Lossless
+    for rendering: sum of counts == len(rows).
+    """
+    out: List[Tuple[HeatRow, int]] = []
+    for row in rows:
+        if (
+            out
+            and out[-1][0].signature == row.signature
+            and out[-1][0].region == row.region
+            and row.tag == out[-1][0].tag + out[-1][1]
+        ):
+            out[-1] = (out[-1][0], out[-1][1] + 1)
+        else:
+            out.append((row, 1))
+    return out

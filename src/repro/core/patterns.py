@@ -1,0 +1,425 @@
+"""The five CUTHERMO inefficiency patterns, detected on TPU heat maps.
+
+Each detector consumes a RegionHeatmap and emits PatternReports with
+evidence rows and a severity in [0, 1].  Thresholds follow the paper's
+qualitative definitions (§IV-C):
+
+  HOT_SPOT        sector temps high AND word temps ~= sector temp
+                  (uniform -> 'hot', irregular -> 'hot-random')
+  SCRATCH_ABUSE   user-managed scratch (SMEM analogue) whose words have
+                  temp == 1: program-local data parked in shared space
+  FALSE_SHARING   sector temp >> max word temp: distinct programs own
+                  distinct words of the same sector -> one transfer per
+                  program instead of one per sector
+  MISALIGNMENT    boundary sectors partially covered because block
+                  origins are not tile-aligned -> extra transfer per row
+  STRIDED         the same word offset touched across many sectors while
+                  other words stay cold -> 1/words of each transfer useful
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import statistics
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .heatmap import Heatmap, HeatRow, RegionHeatmap
+
+HOT = "hot"
+HOT_RANDOM = "hot-random"
+SCRATCH_ABUSE = "scratch-abuse"
+FALSE_SHARING = "false-sharing"
+MISALIGNMENT = "misalignment"
+STRIDED = "strided"
+
+ALL_PATTERNS = (HOT, HOT_RANDOM, SCRATCH_ABUSE, FALSE_SHARING, MISALIGNMENT, STRIDED)
+
+
+@dataclasses.dataclass(frozen=True)
+class PatternReport:
+    pattern: str
+    region: str
+    kernel: str
+    severity: float  # 0..1
+    evidence: Tuple[str, ...]
+    rows: Tuple[HeatRow, ...] = ()
+    details: Tuple[Tuple[str, float], ...] = ()
+
+    def detail(self, key: str, default: float = 0.0) -> float:
+        for k, v in self.details:
+            if k == key:
+                return v
+        return default
+
+
+def _mean(xs: Sequence[float]) -> float:
+    return sum(xs) / len(xs) if xs else 0.0
+
+
+# --------------------------------------------------------------------------
+# individual detectors
+# --------------------------------------------------------------------------
+
+def detect_hot(
+    rh: RegionHeatmap, kernel: str, min_temp: int = 4
+) -> Optional[PatternReport]:
+    """Hot / random-hot sectors: heavily shared data (Fig. 6 e/f)."""
+    if rh.region.space != "hbm" or not rh.rows:
+        return None
+    hot_rows = [r for r in rh.rows if r.sector_temp >= min_temp]
+    if not hot_rows:
+        return None
+    # "hot": word temps close to sector temp (everything shared by everyone)
+    uniform, random_ = [], []
+    for r in hot_rows:
+        touched = [t for t in r.word_temps if t > 0]
+        if not touched:
+            continue
+        if min(touched) >= 0.5 * r.sector_temp and len(touched) >= len(r.word_temps) // 2:
+            uniform.append(r)
+        else:
+            random_.append(r)
+    # Strided regions also have high sector temps but only one warm word;
+    # hot requires multiple warm words per sector (handled by the split
+    # above: single-word rows land in random_ with low evidence).
+    if len(uniform) >= max(1, len(rh.rows) // 16):
+        frac = len(uniform) / len(rh.rows)
+        temp = _mean([r.sector_temp for r in uniform])
+        return PatternReport(
+            pattern=HOT,
+            region=rh.region.name,
+            kernel=kernel,
+            severity=min(1.0, frac * temp / max(1, rh.n_programs)),
+            evidence=(
+                f"{len(uniform)}/{len(rh.rows)} sectors have sector temp >= {min_temp} "
+                f"with uniformly warm words (mean sector temp {temp:.1f}, "
+                f"{rh.n_programs} sampled programs)",
+                "shared across many grid programs -> keep resident in VMEM "
+                "(reorder grid / dimension_semantics) instead of re-fetching",
+            ),
+            rows=tuple(uniform[:8]),
+            details=(("mean_temp", temp), ("fraction", frac)),
+        )
+    if len(random_) >= max(1, len(rh.rows) // 8):
+        multiword = [
+            r for r in random_ if sum(1 for t in r.word_temps if t > 0) >= 2
+        ]
+        if not multiword:
+            return None
+        temp = _mean([r.sector_temp for r in multiword])
+        return PatternReport(
+            pattern=HOT_RANDOM,
+            region=rh.region.name,
+            kernel=kernel,
+            severity=min(1.0, 0.5 * len(multiword) / len(rh.rows)),
+            evidence=(
+                f"{len(multiword)}/{len(rh.rows)} sectors irregularly hot "
+                f"(mean sector temp {temp:.1f}); data-dependent sharing",
+            ),
+            rows=tuple(multiword[:8]),
+            details=(("mean_temp", temp),),
+        )
+    return None
+
+
+def detect_scratch_abuse(
+    rh: RegionHeatmap, kernel: str
+) -> Optional[PatternReport]:
+    """SMEM-abuse analogue: scratch holding program-local data (Fig. 6 a)."""
+    if rh.region.space != "vmem_scratch" or not rh.rows:
+        return None
+    # program-local: NO word is shared by two programs (sector temp may
+    # exceed 1 when distinct programs own distinct words — still local)
+    local_rows = [
+        r
+        for r in rh.rows
+        if all(t <= 1 for t in r.word_temps) and any(t == 1 for t in r.word_temps)
+    ]
+    frac = len(local_rows) / len(rh.rows)
+    if frac < 0.75:
+        return None
+    return PatternReport(
+        pattern=SCRATCH_ABUSE,
+        region=rh.region.name,
+        kernel=kernel,
+        severity=frac,
+        evidence=(
+            f"{len(local_rows)}/{len(rh.rows)} scratch sectors are touched by "
+            "exactly one grid program per word: the data is program-local",
+            "scratch (SMEM analogue) buys nothing here and costs VMEM that "
+            "the pipeline could use for deeper double-buffering -> keep the "
+            "value in a VREG accumulator (fuse the reduction) and drop the "
+            "scratch allocation",
+        ),
+        rows=tuple(local_rows[:8]),
+        details=(("local_fraction", frac),),
+    )
+
+
+def detect_false_sharing(
+    rh: RegionHeatmap, kernel: str, ratio: float = 3.0
+) -> Optional[PatternReport]:
+    """Sector temp >> word temps: each program owns a different word (Fig. 6 b)."""
+    if rh.region.space != "hbm" or not rh.rows:
+        return None
+    fs_rows: List[HeatRow] = []
+    for r in rh.rows:
+        max_word = max(r.word_temps) if r.word_temps else 0
+        touched = sum(1 for t in r.word_temps if t > 0)
+        if max_word >= 1 and touched >= 2 and r.sector_temp >= ratio * max_word:
+            fs_rows.append(r)
+    if len(fs_rows) < max(2, len(rh.rows) // 8):
+        return None
+    mean_ratio = _mean(
+        [r.sector_temp / max(1, max(r.word_temps)) for r in fs_rows]
+    )
+    wps = rh.words_per_sector()
+    return PatternReport(
+        pattern=FALSE_SHARING,
+        region=rh.region.name,
+        kernel=kernel,
+        severity=min(1.0, (mean_ratio - 1) / (wps - 1)) if wps > 1 else 1.0,
+        evidence=(
+            f"{len(fs_rows)}/{len(rh.rows)} sectors: sector temp is "
+            f"{mean_ratio:.1f}x the hottest word -> ~{mean_ratio:.0f} tile "
+            "transfers where 1 would do",
+            "distinct grid programs own distinct sublanes of the same tile "
+            "-> swap grid axes / re-tile so one program covers whole tiles",
+        ),
+        rows=tuple(fs_rows[:8]),
+        details=(("mean_ratio", mean_ratio), ("n_rows", float(len(fs_rows)))),
+    )
+
+
+def _head_tail_overlap(r: HeatRow) -> Optional[int]:
+    """If a strict head (or tail) run of words is exactly one contributor
+    hotter than the rest — the signature of every block straddling one tile
+    boundary — return the run length, else None."""
+    temps = r.word_temps
+    wps = len(temps)
+    if wps < 2 or min(temps) == 0:
+        return None
+    lo = min(temps)
+    hi = max(temps)
+    if hi != lo + 1 or r.sector_temp != hi:
+        return None
+    hot_idx = [i for i, t in enumerate(temps) if t == hi]
+    k = len(hot_idx)
+    if 0 < k < wps and (hot_idx == list(range(k)) or hot_idx == list(range(wps - k, wps))):
+        return k
+    return None
+
+
+def detect_misalignment(
+    rh: RegionHeatmap, kernel: str
+) -> Optional[PatternReport]:
+    """Block origins straddling tile boundaries (Fig. 7).
+
+    Two observable signatures:
+      A. *periodic overlap*: every block is misaligned by the same k words,
+         so each tile's head (or tail) k words are touched by one extra
+         program: head temps == lo+1, rest == lo, sector temp == lo+1.
+      B. *boundary sectors*: partially-touched sectors (head/tail words
+         cold, or sector temp above all words) adjacent to fully-covered
+         interior sectors — the classic 5-transfers-where-4-would-do.
+    """
+    if rh.region.space != "hbm" or len(rh.rows) < 3:
+        return None
+    wps = rh.words_per_sector()
+    overlap_rows: List[HeatRow] = []
+    boundary: List[HeatRow] = []
+    interior: List[HeatRow] = []
+    for r in rh.rows:
+        touched = [t for t in r.word_temps if t > 0]
+        valid = rh.valid_words(r.tag)
+        if not touched:
+            continue
+        if _head_tail_overlap(r) is not None:
+            overlap_rows.append(r)
+        elif len(touched) >= valid and max(r.word_temps) == r.sector_temp:
+            interior.append(r)
+        elif r.sector_temp > max(r.word_temps):
+            boundary.append(r)
+        elif len(touched) < valid and r.sector_temp == max(r.word_temps):
+            boundary.append(r)  # edge sector with unused head/tail words
+        else:
+            interior.append(r)
+
+    # Signature A: majority of sectors show the same-k overlap.
+    frac_a = len(overlap_rows) / len(rh.rows)
+    if frac_a >= 0.5:
+        actual_tx = sum(r.sector_temp for r in overlap_rows)
+        ideal_tx = sum(sum(r.word_temps) for r in overlap_rows) / wps
+        overhead = max(0.0, actual_tx / max(ideal_tx, 1e-9) - 1.0)
+        return PatternReport(
+            pattern=MISALIGNMENT,
+            region=rh.region.name,
+            kernel=kernel,
+            severity=min(1.0, overhead),
+            evidence=(
+                f"{len(overlap_rows)}/{len(rh.rows)} sectors show a head/tail "
+                "word run one contributor hotter than the rest: every block "
+                "origin straddles a tile boundary by the same offset",
+                f"~{100*overhead:.0f}% extra tile transfers -> pad the array "
+                "(or shift the block origin) to the (sublane,128) tile, or "
+                "duplicate boundary words (paper's zigzag fix)",
+            ),
+            rows=tuple(overlap_rows[:8]),
+            details=(("overhead", overhead), ("boundary_fraction", frac_a)),
+        )
+
+    # Signature C: EVERY interior block straddles a boundary — all words
+    # covered, uniform word temps, sector temp exactly 2x (two programs
+    # split each tile head/tail), with partially-covered run-edge tiles.
+    two_way = [
+        r
+        for r in rh.rows
+        if r.word_temps
+        and len({t for t in r.word_temps if t > 0}) == 1
+        and sum(1 for t in r.word_temps if t > 0) >= rh.valid_words(r.tag)
+        and r.sector_temp == 2 * max(r.word_temps)
+    ]
+    edge_partial = [
+        r
+        for r in rh.rows
+        if 0 < sum(1 for t in r.word_temps if t > 0) < rh.valid_words(r.tag)
+    ]
+    if edge_partial and len(two_way) >= 0.5 * len(rh.rows):
+        overhead = 1.0  # ~2x transfers on the straddled tiles
+        return PatternReport(
+            pattern=MISALIGNMENT,
+            region=rh.region.name,
+            kernel=kernel,
+            severity=min(1.0, len(two_way) / len(rh.rows)),
+            evidence=(
+                f"{len(two_way)}/{len(rh.rows)} sectors are split between "
+                "exactly two programs (uniform words, sector temp 2x) with "
+                f"{len(edge_partial)} half-covered run-edge tiles: every "
+                "block origin straddles a tile boundary",
+                "pad the array or shift the block origin to the "
+                "(sublane,128) tile; or duplicate boundary words (zigzag)",
+            ),
+            rows=tuple(two_way[:8]),
+            details=(("overhead", overhead),
+                     ("boundary_fraction", len(two_way) / len(rh.rows))),
+        )
+
+    # Signature B: minority boundary sectors between fully-used interiors.
+    if not boundary or not interior:
+        return None
+    frac = len(boundary) / len(rh.rows)
+    if frac < 0.02 or frac > 0.6:
+        return None
+    overhead = len(boundary) / max(1, len(interior))
+    return PatternReport(
+        pattern=MISALIGNMENT,
+        region=rh.region.name,
+        kernel=kernel,
+        severity=min(1.0, overhead),
+        evidence=(
+            f"{len(boundary)} boundary sectors are split/partially used next "
+            f"to {len(interior)} fully-used interior sectors: block origins "
+            "are not tile-aligned",
+            f"~{100*overhead:.0f}% extra tile transfers + wasted VMEM words "
+            "-> pad the array (or shift block origin) to the (sublane,128) "
+            "tile, or duplicate boundary elements (paper's zigzag fix)",
+        ),
+        rows=tuple(boundary[:8]),
+        details=(("overhead", overhead), ("boundary_fraction", frac)),
+    )
+
+
+def detect_strided(
+    rh: RegionHeatmap, kernel: str
+) -> Optional[PatternReport]:
+    """Same word offset warm across many sectors, others cold (Fig. 6 d)."""
+    if rh.region.space != "hbm" or len(rh.rows) < 4:
+        return None
+    wps = rh.words_per_sector()
+    if wps < 2:
+        return None
+    sparse_rows = []
+    offsets: List[int] = []
+    for r in rh.rows:
+        valid = rh.valid_words(r.tag)
+        if valid < 2:
+            continue  # edge tiles with one real word can't be "sparse"
+        touched_idx = [i for i, t in enumerate(r.word_temps) if t > 0]
+        if 0 < len(touched_idx) <= max(1, valid // 4):
+            sparse_rows.append(r)
+            offsets.extend(touched_idx)
+    if not offsets:
+        return None
+    frac = len(sparse_rows) / len(rh.rows)
+    if frac < 0.6:
+        return None
+    # offsets should be concentrated (same word position across sectors)
+    try:
+        mode_off = statistics.mode(offsets)
+    except statistics.StatisticsError:
+        mode_off = offsets[0]
+    concentration = offsets.count(mode_off) / len(offsets)
+    waste = 1.0 - _mean(
+        [sum(1 for t in r.word_temps if t > 0) / wps for r in sparse_rows]
+    )
+    tags = [r.tag for r in sparse_rows]
+    stride = statistics.mode([b - a for a, b in zip(tags, tags[1:])]) if len(tags) > 1 else 1
+    return PatternReport(
+        pattern=STRIDED,
+        region=rh.region.name,
+        kernel=kernel,
+        severity=min(1.0, waste),
+        evidence=(
+            f"{len(sparse_rows)}/{len(rh.rows)} sectors have <= {wps//4} of "
+            f"{wps} words touched; word offset {mode_off} recurs in "
+            f"{100*concentration:.0f}% of touches, sector stride {stride}",
+            f"{100*waste:.0f}% of every transferred tile is dead -> transpose "
+            "the layout so the strided axis becomes the minor (lane) dim, or "
+            "gather the column once into VMEM scratch and reuse",
+        ),
+        rows=tuple(sparse_rows[:8]),
+        details=(
+            ("waste", waste),
+            ("stride", float(stride)),
+            ("word_offset", float(mode_off)),
+        ),
+    )
+
+
+DETECTORS = (
+    detect_scratch_abuse,
+    detect_false_sharing,
+    detect_strided,
+    detect_misalignment,
+    detect_hot,
+)
+
+
+def detect_all(heatmap: Heatmap) -> List[PatternReport]:
+    """Run every detector on every region; sort by severity.
+
+    Precedence: false-sharing and strided are *more specific* diagnoses
+    than (random-)hot — their heat signatures are supersets — so when one
+    of them fires for a region, the hot-random report there is dropped
+    (the paper distinguishes them by the sector-vs-word temperature gap).
+    """
+    reports: List[PatternReport] = []
+    for rh in heatmap.regions:
+        region_reports = [
+            rep for det in DETECTORS if (rep := det(rh, heatmap.kernel))
+        ]
+        specific = {r.pattern for r in region_reports}
+        if FALSE_SHARING in specific or STRIDED in specific:
+            region_reports = [
+                r for r in region_reports if r.pattern != HOT_RANDOM
+            ]
+        reports.extend(region_reports)
+    reports.sort(key=lambda r: -r.severity)
+    return reports
+
+
+def patterns_by_region(heatmap: Heatmap) -> Dict[str, List[str]]:
+    out: Dict[str, List[str]] = {}
+    for rep in detect_all(heatmap):
+        out.setdefault(rep.region, []).append(rep.pattern)
+    return out

@@ -1,0 +1,144 @@
+"""Heat-map rendering: CSV (paper Fig. 5 layout), ANSI terminal, HTML.
+
+The vertical layout matches CUTHERMO's GUI: one row per sector tag,
+word temperatures left-to-right, the whole-sector temperature in the
+last column.  Consecutive rows with identical signatures are compressed
+and annotated with their repetition count (paper Fig. 4).
+"""
+
+from __future__ import annotations
+
+import html as _html
+import io
+from typing import List, Optional, Sequence, Tuple
+
+from .heatmap import Heatmap, HeatRow, RegionHeatmap, compress_rows
+
+# ANSI 256-color heat ramp (cold -> hot)
+_RAMP = [17, 19, 26, 32, 37, 71, 106, 142, 178, 208, 202, 196]
+
+
+def _heat_color(temp: int, max_temp: int) -> int:
+    if temp <= 0:
+        return 236  # grey for untouched
+    frac = min(1.0, temp / max(1, max_temp))
+    return _RAMP[min(len(_RAMP) - 1, int(frac * (len(_RAMP) - 1)))]
+
+
+def render_csv(hm: Heatmap, compress: bool = True) -> str:
+    """CSV rows: region,tag,repeat,w0..wN,sector (paper's CSV artifact)."""
+    out = io.StringIO()
+    for rh in hm.regions:
+        wps = rh.words_per_sector()
+        header = ",".join(
+            ["region", "sector_tag", "repeat"]
+            + [f"w{i}" for i in range(wps)]
+            + ["sector"]
+        )
+        out.write(header + "\n")
+        rows: Sequence[Tuple[HeatRow, int]]
+        rows = compress_rows(rh.rows) if compress else [(r, 1) for r in rh.rows]
+        for row, rep in rows:
+            out.write(
+                ",".join(
+                    [rh.region.name, f"0x{row.tag:x}", str(rep)]
+                    + [str(t) for t in row.word_temps]
+                    + [str(row.sector_temp)]
+                )
+                + "\n"
+            )
+    return out.getvalue()
+
+
+def render_ascii(
+    hm: Heatmap,
+    color: bool = False,
+    max_rows_per_region: int = 24,
+) -> str:
+    """Terminal heat map: the paper's Fig. 5 vertical layout."""
+    out = io.StringIO()
+    out.write(
+        f"kernel={hm.kernel} grid={hm.grid} sampler={hm.sampler} "
+        f"records={hm.n_records}"
+        + (f" dropped={hm.dropped}" if hm.dropped else "")
+        + "\n"
+    )
+    for rh in hm.regions:
+        max_temp = max(rh.max_sector_temp, 1)
+        wps = rh.words_per_sector()
+        out.write(
+            f"-- region {rh.region.name} [{rh.region.space}] "
+            f"{rh.region.geometry.shape} x{rh.region.geometry.itemsize}B "
+            f"({rh.touched_sectors} sectors touched, "
+            f"{rh.n_programs} programs, max temp {rh.max_sector_temp}) --\n"
+        )
+        header = " " * 28 + " ".join(f"w{i:<2}" for i in range(wps)) + " | sect"
+        out.write(header + "\n")
+        shown = 0
+        for row, rep in compress_rows(rh.rows):
+            if shown >= max_rows_per_region:
+                out.write(f"  ... ({rh.touched_sectors - shown} more sectors)\n")
+                break
+            label = f"{rh.region.name[:12]:<12} 0x{row.tag:08x}"
+            cells = []
+            for t in row.word_temps:
+                cell = f"{t:<3}"
+                if color:
+                    cell = f"\x1b[38;5;{_heat_color(t, max_temp)}m{cell}\x1b[0m"
+                cells.append(cell)
+            sect = f"{row.sector_temp}"
+            if color:
+                sect = (
+                    f"\x1b[38;5;{_heat_color(row.sector_temp, max_temp)}m"
+                    f"{sect}\x1b[0m"
+                )
+            suffix = f"  x{rep}" if rep > 1 else ""
+            out.write(f"{label:<27} {' '.join(cells)} | {sect}{suffix}\n")
+            shown += rep
+    return out.getvalue()
+
+
+def render_html(hm: Heatmap) -> str:
+    """Standalone HTML heat map (the GUI artifact)."""
+    parts: List[str] = [
+        "<!doctype html><meta charset='utf-8'>",
+        f"<title>thermo: {_html.escape(hm.kernel)}</title>",
+        "<style>body{font-family:monospace;background:#111;color:#ddd}"
+        "table{border-collapse:collapse;margin:12px 0}"
+        "td{padding:2px 6px;border:1px solid #222;text-align:center}"
+        "th{padding:2px 6px;color:#999}</style>",
+        f"<h2>kernel {_html.escape(hm.kernel)} grid={hm.grid} "
+        f"sampler={_html.escape(hm.sampler)}</h2>",
+    ]
+    for rh in hm.regions:
+        max_temp = max(rh.max_sector_temp, 1)
+        wps = rh.words_per_sector()
+        parts.append(
+            f"<h3>region {_html.escape(rh.region.name)} "
+            f"[{rh.region.space}] {rh.region.geometry.shape}</h3><table>"
+        )
+        parts.append(
+            "<tr><th>sector</th><th>rep</th>"
+            + "".join(f"<th>w{i}</th>" for i in range(wps))
+            + "<th>sector&deg;</th></tr>"
+        )
+        for row, rep in compress_rows(rh.rows):
+            cells = []
+            for t in row.word_temps + (row.sector_temp,):
+                frac = min(1.0, t / max_temp) if t > 0 else 0.0
+                r = int(40 + 215 * frac)
+                b = int(80 * (1 - frac)) + 20
+                bg = f"rgb({r},{int(40+60*(1-frac))},{b})" if t else "#1a1a1a"
+                cells.append(f"<td style='background:{bg}'>{t}</td>")
+            parts.append(
+                f"<tr><td>0x{row.tag:x}</td><td>{rep}</td>{''.join(cells)}</tr>"
+            )
+        parts.append("</table>")
+    return "".join(parts)
+
+
+def save(hm: Heatmap, path: str, fmt: Optional[str] = None) -> None:
+    fmt = fmt or ("html" if path.endswith(".html") else "csv")
+    text = render_html(hm) if fmt == "html" else render_csv(hm)
+    with open(path, "w") as f:
+        f.write(text)

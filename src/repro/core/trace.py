@@ -1,0 +1,174 @@
+"""Trace records and sampling — the CUTHERMO trace-collector data model.
+
+CUTHERMO's NVBit injection captures, per issued memory instruction:
+``pc, address[32], size, active_mask, access_flags, warp_id, block_id``.
+
+The TPU analogue of an "issued memory instruction" is one HBM<->VMEM
+block transfer issued on behalf of one grid program (Level 1), or one
+explicitly traced in-kernel access site (Level 2).  A record carries:
+
+    site        "pc": stable id of the access site (operand name or an
+                explicit trace-site label inside a kernel)
+    space       memory space ('hbm' for operands, 'vmem_scratch' for
+                user-managed scratch — the SMEM analogue)
+    kind        'load' | 'store' | 'accum'
+    program_id  the grid coordinates ("warp id")
+    touches     list of (sector_tag, word_offset) in the target array
+
+Block-sampling (CUTHERMO §IV-B): tracing every grid program of a big
+kernel is overwhelming and aliases ids; we sample a *window* of the grid
+(default: leading grid coordinate == 0), the analogue of tracing one
+thread block.  Kernel whitelisting is supported the same way.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .tiles import TileGeometry
+
+ProgramId = Tuple[int, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class AccessRecord:
+    """One sampled memory access (site x grid-program x touched words)."""
+
+    array: str
+    site: str
+    space: str  # 'hbm' | 'vmem_scratch'
+    kind: str  # 'load' | 'store' | 'accum'
+    program_id: ProgramId
+    touches: Tuple[Tuple[int, int], ...]  # (sector_tag, word_offset)
+
+
+@dataclasses.dataclass(frozen=True)
+class RegionInfo:
+    """A registered memory region (CUTHERMO's cudaMalloc callback analogue)."""
+
+    name: str
+    geometry: TileGeometry
+    space: str = "hbm"
+
+
+class GridSampler:
+    """Thread-block-sampling analogue: admit only a window of grid programs.
+
+    ``target`` pins leading grid coordinates; e.g. target=(0,) with a
+    3-D grid admits programs (0, *, *).  target=None admits everything
+    (full trace — expensive, used by the overhead benchmark).
+
+    ``window`` widens the LAST pinned coordinate to a contiguous run of
+    ``window`` programs — the analogue of one thread block containing 32
+    warps (essential for 1-D grids, where pinning a single coordinate
+    would admit a single program and hide all inter-program sharing).
+    """
+
+    def __init__(self, target: Optional[Sequence[int]] = (0,), window: int = 1):
+        self.target = None if target is None else tuple(int(t) for t in target)
+        self.window = max(1, int(window))
+
+    def admits(self, program_id: ProgramId) -> bool:
+        if self.target is None:
+            return True
+        k = min(len(self.target), len(program_id))
+        if k == 0:
+            return True
+        if tuple(program_id[: k - 1]) != self.target[: k - 1]:
+            return False
+        lo = self.target[k - 1] * self.window
+        return lo <= program_id[k - 1] < lo + self.window
+
+    def describe(self) -> str:
+        if self.target is None:
+            return "full-grid"
+        w = f"x{self.window}" if self.window > 1 else ""
+        return f"grid[{','.join(map(str, self.target))}{w},...]"
+
+
+class KernelWhitelist:
+    """Kernel-sampling: only trace kernels whose name matches the whitelist."""
+
+    def __init__(self, names: Optional[Iterable[str]] = None):
+        self.names = None if names is None else set(names)
+
+    def admits(self, kernel_name: str) -> bool:
+        return self.names is None or kernel_name in self.names
+
+
+class TraceBuffer:
+    """Append-only record buffer with region registry.
+
+    Mirrors CUTHERMO's GPU-queue + memory-registration callbacks: the
+    collector appends records; the Analyzer drains them into the
+    sector_history_map.  ``max_records`` guards runaway full-grid traces.
+    """
+
+    def __init__(self, max_records: int = 2_000_000):
+        self.records: List[AccessRecord] = []
+        self.regions: dict[str, RegionInfo] = {}
+        self.max_records = max_records
+        self.dropped = 0
+
+    def register_region(self, region: RegionInfo) -> None:
+        self.regions[region.name] = region
+
+    def append(self, rec: AccessRecord) -> None:
+        if len(self.records) >= self.max_records:
+            self.dropped += 1
+            return
+        self.records.append(rec)
+
+    def extend(self, recs: Iterable[AccessRecord]) -> None:
+        for r in recs:
+            self.append(r)
+
+    def __len__(self) -> int:
+        return len(self.records)
+
+    def clear(self) -> None:
+        self.records.clear()
+        self.dropped = 0
+
+
+def linearize(program_id: ProgramId, grid: Sequence[int]) -> int:
+    """Row-major linear program id (the 'warp id' written into bitmasks)."""
+    if not program_id:
+        return 0
+    return int(np.ravel_multi_index(tuple(program_id), tuple(grid)))
+
+
+def enumerate_grid(grid: Sequence[int]) -> Iterable[ProgramId]:
+    """All grid program ids in row-major order."""
+    if not grid:
+        yield ()
+        return
+    for flat in range(int(np.prod(grid, dtype=np.int64))):
+        yield tuple(int(x) for x in np.unravel_index(flat, tuple(grid)))
+
+
+def sampled_grid(
+    grid: Sequence[int], sampler: GridSampler
+) -> Iterable[ProgramId]:
+    """Grid program ids admitted by the sampler, without materializing all."""
+    grid = tuple(int(g) for g in grid)
+    if sampler.target is None:
+        yield from enumerate_grid(grid)
+        return
+    k = min(len(sampler.target), len(grid))
+    if k == 0:
+        yield from enumerate_grid(grid)
+        return
+    head = sampler.target[: k - 1]
+    lo = sampler.target[k - 1] * sampler.window
+    hi = min(lo + sampler.window, grid[k - 1])
+    tail = grid[k:]
+    for mid in range(lo, hi):
+        for pid_tail in enumerate_grid(tail):
+            yield head + (mid,) + pid_tail
+
+
+DynamicAccessFn = Callable[..., Iterable[Tuple[int, int]]]

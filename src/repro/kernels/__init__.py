@@ -1,0 +1,14 @@
+"""repro.kernels — Pallas TPU kernels for the perf-critical hot spots.
+
+Each module ships: the ``pl.pallas_call`` kernel (TPU target, validated
+with interpret=True on CPU), a profiler ``KernelSpec`` builder (the
+CUTHERMO instrumentation path), plus ``ops`` (jit wrappers) and ``ref``
+(pure-jnp oracles).
+"""
+
+from . import flash, gemm, gmm, gramschm, histogram, ops, ref, spmv, ssd, ttm
+
+__all__ = [
+    "flash", "gemm", "gmm", "gramschm", "histogram", "ops", "ref", "spmv",
+    "ssd", "ttm",
+]

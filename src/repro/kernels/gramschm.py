@@ -1,0 +1,139 @@
+"""Gram-Schmidt kernels (PolybenchGPU GRAMSCHM) — the strided case study.
+
+§VI-D: ``kernel3`` reads ``q[i*NJ + k]`` — a stride-NJ walk of the flat
+address space.  On TPU the same walk shows up two ways:
+
+  * Level-1 (block geometry): the naive kernel pulls a (NI, 1) column
+    block of ``q`` — every (8,128) tile of the tile-column crosses the
+    HBM boundary for 1/128th of its lanes (the transaction model shows
+    NI/8 tiles per program where the transposed kernel needs NI/128).
+  * Level-2 (flat address trace): the stride-NJ element stream touches
+    the same word offsets across consecutive tiles while neighbours stay
+    cold — the paper's strided heat signature, detected by
+    ``detect_strided`` on the dynamic trace.
+
+Fix (identical to the paper): transpose ``q`` so the strided axis is the
+minor/lane dimension -> contiguous (1, NI) row loads.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.collector import KernelSpec, OperandSpec
+
+
+def _k3_naive_kernel(q_ref, a_ref, r_ref):
+    # q: (NI, 1) column block; a: (NI, BJ); r: (1, BJ)
+    qcol = q_ref[...].astype(jnp.float32)  # (NI, 1)
+    r_ref[...] = jnp.sum(qcol * a_ref[...].astype(jnp.float32), axis=0, keepdims=True).astype(
+        r_ref.dtype
+    )
+
+
+def gramschm_k3_naive(
+    q: jax.Array,  # (NI, NK)
+    a: jax.Array,  # (NI, NJ)
+    k: int,
+    bj: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    ni, nk = q.shape
+    _, nj = a.shape
+    assert nj % bj == 0
+    return pl.pallas_call(
+        _k3_naive_kernel,
+        grid=(nj // bj,),
+        in_specs=[
+            pl.BlockSpec((ni, 1), lambda j: (0, k)),  # strided column read
+            pl.BlockSpec((ni, bj), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bj), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, nj), jnp.float32),
+        interpret=interpret,
+    )(q, a)[0]
+
+
+def _k3_opt_kernel(qt_ref, a_ref, r_ref):
+    # qt: (1, NI) contiguous row block; a: (NI, BJ)
+    qrow = qt_ref[...].astype(jnp.float32)  # (1, NI)
+    r_ref[...] = (qrow @ a_ref[...].astype(jnp.float32)).astype(r_ref.dtype)
+
+
+def gramschm_k3_opt(
+    qt: jax.Array,  # (NK, NI) — q transposed
+    a: jax.Array,  # (NI, NJ)
+    k: int,
+    bj: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    nk, ni = qt.shape
+    _, nj = a.shape
+    return pl.pallas_call(
+        _k3_opt_kernel,
+        grid=(nj // bj,),
+        in_specs=[
+            pl.BlockSpec((1, ni), lambda j: (k, 0)),  # contiguous row read
+            pl.BlockSpec((ni, bj), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bj), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, nj), jnp.float32),
+        interpret=interpret,
+    )(qt, a)[0]
+
+
+# ---------------------------------------------------------------------------
+# profiler specs
+# ---------------------------------------------------------------------------
+
+
+def k3_naive_spec(ni: int, nj: int, nk: int, k: int = 0, bj: int = 128) -> KernelSpec:
+    """Flat-address dynamic trace of the stride-NJ q walk + block geometry."""
+
+    def q_stride_walk(pid, **_):
+        # program j reads q[i*NJ + k] for all i — the paper's exact stream
+        return [i * nk + k for i in range(ni)]
+
+    return KernelSpec(
+        name="gramschmidt_kernel3",
+        grid=(nj // bj,),
+        operands=(
+            OperandSpec("q", (ni * nk,), np.float32, (ni * nk,), lambda j: (0,)),
+            OperandSpec("a", (ni, nj), np.float32, (ni, bj), lambda j: (0, j)),
+            OperandSpec("r", (1, nj), np.float32, (1, bj), lambda j: (0, j), kind="store"),
+        ),
+        dynamic=(("q", q_stride_walk),),
+    )
+
+
+def k3_naive_block_spec(ni: int, nj: int, nk: int, k: int = 0, bj: int = 128) -> KernelSpec:
+    """2-D block geometry of the naive kernel (transaction model)."""
+    return KernelSpec(
+        name="gramschmidt_kernel3_blocks",
+        grid=(nj // bj,),
+        operands=(
+            OperandSpec("q", (ni, nk), np.float32, (ni, 1), lambda j: (0, k)),
+            OperandSpec("a", (ni, nj), np.float32, (ni, bj), lambda j: (0, j)),
+            OperandSpec("r", (1, nj), np.float32, (1, bj), lambda j: (0, j), kind="store"),
+        ),
+    )
+
+
+def k3_opt_spec(ni: int, nj: int, nk: int, k: int = 0, bj: int = 128) -> KernelSpec:
+    def q_contig_walk(pid, **_):
+        # transposed: program j reads qT[k*NI + i] — contiguous
+        return [k * ni + i for i in range(ni)]
+
+    return KernelSpec(
+        name="gramschmidt_kernel3_opt",
+        grid=(nj // bj,),
+        operands=(
+            OperandSpec("qT", (nk * ni,), np.float32, (nk * ni,), lambda j: (0,)),
+            OperandSpec("a", (ni, nj), np.float32, (ni, bj), lambda j: (0, j)),
+            OperandSpec("r", (1, nj), np.float32, (1, bj), lambda j: (0, j), kind="store"),
+        ),
+        dynamic=(("qT", q_contig_walk),),
+    )

@@ -1,0 +1,76 @@
+"""Jit'd public wrappers over the Pallas kernels.
+
+``interpret`` defaults to True on CPU (this container) and should be set
+False on real TPU backends; the wrappers pick automatically.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import flash as _flash
+from . import gemm as _gemm
+from . import gmm as _gmm
+from . import gramschm as _gs
+from . import histogram as _hist
+from . import spmv as _spmv
+from . import ssd as _ssd
+from . import ttm as _ttm
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("variant", "bm", "bn", "bk"))
+def matmul(a, b, variant: str = "v02", bm: int = 128, bn: int = 128, bk: int = 128):
+    interp = _interpret_default()
+    if variant == "v00":
+        return _gemm.gemm_v00(a, b, interpret=interp)
+    if variant == "v01":
+        return _gemm.gemm_v01(a, b, bm=8, interpret=interp)
+    return _gemm.gemm_v02(a, b, bm=bm, bn=bn, bk=bk, interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bkv"))
+def flash_attention(q, k, v, causal: bool = True, bq: int = 128, bkv: int = 128):
+    return _flash.flash_attention(
+        q, k, v, causal=causal, bq=bq, bkv=bkv, interpret=_interpret_default()
+    )
+
+
+@jax.jit
+def ssd_chunk(x, a, bmat, cmat):
+    return _ssd.ssd_chunk(x, a, bmat, cmat, interpret=_interpret_default())
+
+
+@functools.partial(jax.jit, static_argnames=("br",))
+def spmv(vals, xg, br: int = 8):
+    return _spmv.spmv_ell(vals, xg, br=br, interpret=_interpret_default())
+
+
+@functools.partial(jax.jit, static_argnames=("bf", "use_scratch"))
+def ttm(vals, urows, bf: int = 8, use_scratch: bool = False):
+    return _ttm.ttm(
+        vals, urows, bf=bf, use_scratch=use_scratch, interpret=_interpret_default()
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("k", "bj", "naive"))
+def gramschm_k3(q_or_qt, a, k: int = 0, bj: int = 128, naive: bool = True):
+    fn = _gs.gramschm_k3_naive if naive else _gs.gramschm_k3_opt
+    return fn(q_or_qt, a, k, bj=bj, interpret=_interpret_default())
+
+
+@functools.partial(jax.jit, static_argnames=("n_bins", "block", "naive"))
+def histogram(cells, n_bins: int, block: int = 1024, naive: bool = False):
+    fn = _hist.hist_naive if naive else _hist.hist_opt
+    return fn(cells, n_bins, block=block, interpret=_interpret_default())
+
+
+@functools.partial(jax.jit, static_argnames=("bm",))
+def grouped_matmul(x, w, tile_expert_ids, bm: int = 128):
+    return _gmm.gmm(x, w, tile_expert_ids, bm=bm, interpret=_interpret_default())

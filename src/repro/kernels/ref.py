@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def gemm_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def flash_ref(q: jax.Array, k: jax.Array, v: jax.Array, causal: bool = True) -> jax.Array:
+    """(BH, S, D) naive attention."""
+    d = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q, k, preferred_element_type=jnp.float32)
+    s = s / math.sqrt(d)
+    if causal:
+        sq, sk = s.shape[-2:]
+        mask = jnp.tril(jnp.ones((sq, sk), bool), sk - sq)
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p.astype(v.dtype), v,
+                      preferred_element_type=jnp.float32).astype(q.dtype)
+
+
+def ssd_chunk_ref(x, a, bmat, cmat):
+    """(BH, C, L, ...) intra-chunk term + chunk end states (f32)."""
+    cum = jnp.cumsum(a.astype(jnp.float32), axis=-1)  # (BH, C, L)
+    seg = cum[..., :, None] - cum[..., None, :]
+    l = a.shape[-1]
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    dec = jnp.where(mask, jnp.exp(seg), 0.0)  # (BH, C, L, L)
+    scores = jnp.einsum("gcln,gcsn->gcls", cmat, bmat,
+                        preferred_element_type=jnp.float32) * dec
+    y = jnp.einsum("gcls,gcsp->gclp", scores, x.astype(jnp.float32))
+    w = jnp.exp(cum[..., -1:] - cum)  # (BH, C, L)
+    s = jnp.einsum("gclp,gcl,gcln->gcpn", x.astype(jnp.float32), w, bmat)
+    return y, s
+
+
+def spmv_ref(vals: jax.Array, xg: jax.Array) -> jax.Array:
+    return jnp.sum(vals.astype(jnp.float32) * xg.astype(jnp.float32), axis=1)
+
+
+def spmv_csr_ref(row_offsets, col_indices, values, x):
+    """numpy CSR oracle."""
+    n = len(row_offsets) - 1
+    y = np.zeros(n, np.float32)
+    for r in range(n):
+        s, e = row_offsets[r], row_offsets[r + 1]
+        y[r] = float(np.dot(values[s:e], x[col_indices[s:e]]))
+    return y
+
+
+def ttm_ref(vals: jax.Array, urows: jax.Array) -> jax.Array:
+    return jnp.einsum("fn,fnr->fr", vals.astype(jnp.float32),
+                      urows.astype(jnp.float32))
+
+
+def gramschm_k3_ref(q: jax.Array, a: jax.Array, k: int) -> jax.Array:
+    return (q[:, k].astype(jnp.float32) @ a.astype(jnp.float32)).astype(jnp.float32)
+
+
+def hist_ref(cells: jax.Array, n_bins: int) -> jax.Array:
+    return jnp.zeros(n_bins, jnp.float32).at[cells].add(1.0)
+
+
+def gmm_ragged_ref(x: jax.Array, w: jax.Array, group_sizes: jax.Array) -> jax.Array:
+    return jax.lax.ragged_dot(x, w, group_sizes)

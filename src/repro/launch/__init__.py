@@ -1,0 +1,10 @@
+"""repro.launch — mesh construction, dry-run, train and serve drivers.
+
+NOTE: ``repro.launch.dryrun`` sets XLA_FLAGS for 512 placeholder devices
+at import time; do not import it from code that needs the real device
+count (tests import ``mesh``/``train``/``serve`` only).
+"""
+
+from . import mesh
+
+__all__ = ["mesh"]

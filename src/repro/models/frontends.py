@@ -1,0 +1,59 @@
+"""Modality frontend STUBS (per the assignment).
+
+``[audio]`` / ``[vlm]`` archs specify the transformer BACKBONE only; the
+frontend supplies *precomputed* frame/patch embeddings.  These stubs
+define the input contract (shapes/dtypes for ``input_specs``) and a
+deterministic synthetic generator for smoke tests.  A real deployment
+would swap in the conv mel-spectrogram stack (whisper) or the dynamic-
+resolution ViT (qwen2-vl) behind the same interface.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def audio_frame_spec(
+    batch: int, n_frames: int, d_model: int, dtype=jnp.bfloat16
+) -> jax.ShapeDtypeStruct:
+    """Whisper: (B, frames, d_model) post-conv frame embeddings."""
+    return jax.ShapeDtypeStruct((batch, n_frames, d_model), dtype)
+
+
+def vision_patch_spec(
+    batch: int, n_patches: int, d_model: int, dtype=jnp.bfloat16
+) -> jax.ShapeDtypeStruct:
+    """Qwen2-VL: (B, patches, d_model) post-ViT patch embeddings."""
+    return jax.ShapeDtypeStruct((batch, n_patches, d_model), dtype)
+
+
+def synth_frames(
+    key: jax.Array, batch: int, n_frames: int, d_model: int, dtype=jnp.bfloat16
+) -> jax.Array:
+    return (jax.random.normal(key, (batch, n_frames, d_model)) * 0.02).astype(dtype)
+
+
+def mrope_positions_for_image(
+    batch: int, text_len: int, grid_t: int, grid_h: int, grid_w: int
+) -> np.ndarray:
+    """Build (B, S, 3) M-RoPE position ids: text tokens get equal (t,h,w);
+    image patch tokens get their 3-D grid coordinates (Qwen2-VL §3.1)."""
+    n_img = grid_t * grid_h * grid_w
+    s = text_len + n_img
+    pos = np.zeros((batch, s, 3), np.int32)
+    # image patches first
+    t_ids, h_ids, w_ids = np.meshgrid(
+        np.arange(grid_t), np.arange(grid_h), np.arange(grid_w), indexing="ij"
+    )
+    pos[:, :n_img, 0] = t_ids.reshape(-1)
+    pos[:, :n_img, 1] = h_ids.reshape(-1)
+    pos[:, :n_img, 2] = w_ids.reshape(-1)
+    # text continues after the max image position
+    start = max(grid_t, grid_h, grid_w)
+    text_pos = start + np.arange(text_len)
+    pos[:, n_img:, :] = text_pos[None, :, None]
+    return pos

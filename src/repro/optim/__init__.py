@@ -1,0 +1,23 @@
+"""repro.optim — optimizers, schedules, clipping (from scratch, pytree-native)."""
+
+from .optimizers import (
+    OptState,
+    adamw,
+    lion,
+    global_norm,
+    clip_by_global_norm,
+    Optimizer,
+)
+from .schedules import constant, cosine_warmup, linear_warmup
+
+__all__ = [
+    "OptState",
+    "Optimizer",
+    "adamw",
+    "clip_by_global_norm",
+    "constant",
+    "cosine_warmup",
+    "global_norm",
+    "linear_warmup",
+    "lion",
+]

@@ -1,0 +1,33 @@
+"""Learning-rate schedules (pure functions of the step)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(value: float):
+    def fn(step):
+        return jnp.asarray(value, jnp.float32)
+
+    return fn
+
+
+def linear_warmup(peak: float, warmup_steps: int):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        return peak * jnp.minimum(1.0, s / max(1, warmup_steps))
+
+    return fn
+
+
+def cosine_warmup(peak: float, warmup_steps: int, total_steps: int, floor: float = 0.1):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = peak * jnp.minimum(1.0, s / max(1, warmup_steps))
+        t = jnp.clip(
+            (s - warmup_steps) / max(1, total_steps - warmup_steps), 0.0, 1.0
+        )
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(s < warmup_steps, warm, peak * cos)
+
+    return fn

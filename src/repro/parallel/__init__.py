@@ -1,0 +1,16 @@
+"""repro.parallel — mesh rules, sharding, compression, pipeline."""
+
+from . import compression, pipeline, sharding
+from .sharding import Rules, cache_specs, constrain, make_rules, shardings_from_logical, specs_from_logical
+
+__all__ = [
+    "Rules",
+    "cache_specs",
+    "compression",
+    "constrain",
+    "make_rules",
+    "pipeline",
+    "sharding",
+    "shardings_from_logical",
+    "specs_from_logical",
+]

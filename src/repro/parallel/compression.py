@@ -1,0 +1,96 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+Halves (bf16) or quarters (int8+scale) the bytes each gradient moves over
+the data-parallel all-reduce.  Error feedback keeps the quantization
+residual locally and folds it into the next step's gradient, preserving
+convergence (tested on the tiny-LM integration test).
+
+Under jit/SPMD the all-reduce is implicit (XLA inserts it where the
+sharded batch's gradients merge); casting the gradient tree to the wire
+dtype *before* that point is what shrinks the collective operands — the
+Level-3 HLO walker verifies the byte reduction in benchmarks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    mode: str = "none"  # 'none' | 'bf16' | 'int8'
+    error_feedback: bool = True
+
+
+def init_error_buffer(params: PyTree, cfg: CompressionConfig) -> Optional[PyTree]:
+    if cfg.mode == "none" or not cfg.error_feedback:
+        return None
+    return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+
+def compress(
+    grads: PyTree, err: Optional[PyTree], cfg: CompressionConfig
+) -> Tuple[PyTree, Optional[PyTree]]:
+    """Quantize grads to the wire dtype; return (wire_grads, new_error).
+
+    Call BEFORE the gradients cross the data axis (i.e. on the per-device
+    microbatch gradient); decompress after.
+    """
+    if cfg.mode == "none":
+        return grads, err
+
+    def q_one(g, e):
+        gf = g.astype(jnp.float32) + (e if e is not None else 0.0)
+        if cfg.mode == "bf16":
+            wire = gf.astype(jnp.bfloat16)
+            deq = wire.astype(jnp.float32)
+        else:  # int8 with per-tensor scale
+            scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+            q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+            # wire value: int8 payload carried as bf16 pair (q, scale) —
+            # byte accounting: 1B payload vs 4B f32
+            wire = (q, scale)
+            deq = q.astype(jnp.float32) * scale
+        new_e = gf - deq if cfg.error_feedback else None
+        return wire, new_e
+
+    if err is None:
+        flat, treedef = jax.tree_util.tree_flatten(grads)
+        pairs = [q_one(g, None) for g in flat]
+    else:
+        flat, treedef = jax.tree_util.tree_flatten(grads)
+        flat_e = jax.tree_util.tree_flatten(err)[0]
+        pairs = [q_one(g, e) for g, e in zip(flat, flat_e)]
+    wires = jax.tree_util.tree_unflatten(treedef, [p[0] for p in pairs])
+    new_err = (
+        jax.tree_util.tree_unflatten(treedef, [p[1] for p in pairs])
+        if cfg.error_feedback
+        else None
+    )
+    return wires, new_err
+
+
+def decompress(wire: PyTree, cfg: CompressionConfig) -> PyTree:
+    if cfg.mode == "none":
+        return wire
+    if cfg.mode == "bf16":
+        return jax.tree.map(lambda w: w.astype(jnp.float32), wire)
+
+    def dq(leaf):
+        return leaf
+
+    # int8 wires are (q, scale) tuples at the leaf level
+    def is_wire(x):
+        return isinstance(x, tuple) and len(x) == 2 and hasattr(x[0], "dtype")
+
+    return jax.tree.map(
+        lambda w: w[0].astype(jnp.float32) * w[1] if is_wire(w) else w,
+        wire,
+        is_leaf=is_wire,
+    )

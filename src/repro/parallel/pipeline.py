@@ -1,0 +1,90 @@
+"""GPipe-style pipeline parallelism over a mesh axis (shard_map + ppermute).
+
+Each device along the ``stage`` axis holds one stage's parameters; the
+schedule runs M microbatches through S stages in M + S - 1 ticks, moving
+activations to the next stage with ``jax.lax.ppermute`` each tick.  The
+bubble fraction is (S-1)/(M+S-1) — reported by ``bubble_fraction`` so the
+launcher can size microbatches.
+
+Used when ``pipeline_stages > 1`` maps the ``pod`` axis to stages; the
+default dry-run cells use the pod axis for data parallelism instead (see
+DESIGN.md §4), so this module is exercised by its own tests/benchmarks.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+PyTree = Any
+
+
+def bubble_fraction(n_stages: int, n_microbatches: int) -> float:
+    return (n_stages - 1) / (n_microbatches + n_stages - 1)
+
+
+def pipeline(
+    stage_fn: Callable[[PyTree, jax.Array], jax.Array],
+    mesh: Mesh,
+    axis: str = "stage",
+):
+    """Build a pipelined forward: (stacked_stage_params, microbatches) -> out.
+
+    ``stage_fn(params_i, x)`` is one stage's computation; all stages must
+    share the activation shape.  ``stacked_stage_params`` has a leading
+    stage dim sharded over ``axis``; ``microbatches`` is (M, mb, ...)
+    replicated along ``axis``.
+    """
+    n_stages = mesh.shape[axis]
+
+    def per_device(params_stk, mbs):
+        # params_stk: (1, ...) this device's stage params; mbs: (M, mb, ...)
+        params_i = jax.tree.map(lambda a: a[0], params_stk)
+        stage = jax.lax.axis_index(axis)
+        m = mbs.shape[0]
+        ticks = m + n_stages - 1
+        perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+
+        def tick(carry, t):
+            buf, outs = carry  # buf: activation entering this stage
+            # stage 0 injects microbatch t (when valid)
+            inject = jnp.where(t < m, t, m - 1)
+            x_in = jnp.where(stage == 0, mbs[inject], buf)
+            y = stage_fn(params_i, x_in)
+            # last stage emits to outs at index t - (S-1)
+            out_idx = t - (n_stages - 1)
+            valid = (stage == n_stages - 1) & (out_idx >= 0)
+            outs = jax.lax.cond(
+                valid,
+                lambda o: jax.lax.dynamic_update_index_in_dim(
+                    o, y, jnp.maximum(out_idx, 0), 0
+                ),
+                lambda o: o,
+                outs,
+            )
+            # move activations one stage forward
+            buf_next = jax.lax.ppermute(y, axis, perm)
+            return (buf_next, outs), None
+
+        buf0 = jnp.zeros_like(mbs[0])
+        outs0 = jnp.zeros_like(mbs)
+        (_, outs), _ = jax.lax.scan(tick, (buf0, outs0), jnp.arange(ticks))
+        # only the last stage holds real outputs; zero the rest and psum
+        # to broadcast them to every stage
+        outs = jnp.where(stage == n_stages - 1, outs, jnp.zeros_like(outs))
+        return jax.lax.psum(outs, axis)
+
+    pspec = P(axis)
+    from jax.experimental.shard_map import shard_map
+
+    return shard_map(
+        per_device,
+        mesh=mesh,
+        in_specs=(pspec, P()),
+        out_specs=P(),
+        check_rep=False,
+    )

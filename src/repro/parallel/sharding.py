@@ -1,0 +1,241 @@
+"""Logical-axis sharding rules (MaxText-style) -> physical mesh mapping.
+
+Model code never names mesh axes; it names LOGICAL axes ("embed", "mlp",
+"heads", "expert", "vocab", ...).  A ``Rules`` table maps each logical
+axis to zero or more mesh axes.  DP / FSDP / TP / SP / EP are therefore
+config choices:
+
+    TP    : "mlp"/"heads"/"vocab"/"expert" -> "model"
+    FSDP  : "embed" -> "data" (or ("pod","data") for full sharding)
+    DP    : "batch" -> ("pod", "data")
+    SP    : "cache_seq" -> "model" (long-context serving)
+    EP    : "expert" -> "model"
+
+Changing parallelism = changing the table, not the model.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    """logical axis name -> tuple of mesh axis names (or () = replicate)."""
+
+    table: Tuple[Tuple[str, Tuple[str, ...]], ...]
+
+    def get(self, logical: Optional[str]) -> Tuple[str, ...]:
+        if logical is None:
+            return ()
+        for name, axes in self.table:
+            if name == logical:
+                return axes
+        return ()
+
+    def spec(self, logical_axes: Sequence[Optional[str]]) -> P:
+        parts = []
+        used: set = set()
+        for ax in logical_axes:
+            axes = tuple(a for a in self.get(ax) if a not in used)
+            used.update(axes)
+            if len(axes) == 0:
+                parts.append(None)
+            elif len(axes) == 1:
+                parts.append(axes[0])
+            else:
+                parts.append(axes)
+        return P(*parts)
+
+
+def make_rules(
+    *,
+    data_axes: Tuple[str, ...] = ("data",),
+    model_axis: str = "model",
+    fsdp: bool = True,
+    fsdp_axes: Optional[Tuple[str, ...]] = None,
+    expert_parallel: bool = True,
+    expert_axes: Optional[Tuple[str, ...]] = None,  # e.g. ("model","data")
+    seq_shard_cache: bool = False,
+    extra: Tuple[Tuple[str, Tuple[str, ...]], ...] = (),
+) -> Rules:
+    """Build the standard rules table for a (pod?, data, model) mesh.
+
+    ``expert_axes``: mesh axes the expert dim shards over.  Spanning the
+    data axes too (deepseek: 256 experts over 16x16 chips = 1/chip) makes
+    each expert fully device-local: no FSDP gather and no grad all-reduce
+    for 97% of the parameters (measured 6.2 -> ~0.6 TB wire/device).
+    """
+    fsdp_axes = fsdp_axes or ("data",)
+    expert_axes = expert_axes or ((model_axis,) if expert_parallel else ())
+    # `extra` FIRST: Rules.get returns the first match, so extra entries
+    # override the defaults below
+    table = list(extra) + [
+        ("batch", data_axes),
+        ("layer", ()),
+        ("embed", fsdp_axes if fsdp else ()),
+        ("mlp", (model_axis,)),
+        ("heads", (model_axis,)),
+        ("kv", ()),
+        ("expert", expert_axes),
+        ("vocab", (model_axis,)),
+        # activations
+        ("act_batch", data_axes),
+        ("act_seq", ()),
+        ("act_embed", ()),
+        # caches
+        ("cache_batch", data_axes),
+        ("cache_heads", (model_axis,)),
+        ("cache_seq", (model_axis,) if seq_shard_cache else ()),
+    ]
+    return Rules(tuple(table))
+
+
+# ---------------------------------------------------------------------------
+# tree helpers
+# ---------------------------------------------------------------------------
+
+
+def specs_from_logical(logical_tree: PyTree, rules: Rules) -> PyTree:
+    """Map a tree of logical-axis tuples to a tree of PartitionSpecs."""
+    return jax.tree.map(
+        lambda la: rules.spec(la),
+        logical_tree,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+def shardings_from_logical(
+    logical_tree: PyTree, rules: Rules, mesh: Mesh
+) -> PyTree:
+    return jax.tree.map(
+        lambda spec: NamedSharding(mesh, spec),
+        specs_from_logical(logical_tree, rules),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def fixup_specs(spec_tree: PyTree, shape_tree: PyTree, mesh: Mesh) -> PyTree:
+    """Drop mesh axes from dims they don't divide evenly.
+
+    E.g. an MQA kv-projection (d, 1, 128) cannot shard its singleton
+    heads dim over a 16-way model axis — the spec falls back to
+    replication for that dim (counted; surfaced in the dry-run report).
+    """
+
+    def fix(spec: P, shaped) -> P:
+        dims = tuple(shaped.shape)
+        parts = list(spec) + [None] * (len(dims) - len(spec))
+        out = []
+        for d, part in zip(dims, parts):
+            if part is None:
+                out.append(None)
+                continue
+            axes = (part,) if isinstance(part, str) else tuple(part)
+            size = 1
+            for a in axes:
+                size *= mesh.shape[a]
+            if size == 0 or d % size != 0:
+                # try the prefix of axes that still divides
+                kept = []
+                acc = 1
+                for a in axes:
+                    if d % (acc * mesh.shape[a]) == 0:
+                        kept.append(a)
+                        acc *= mesh.shape[a]
+                out.append(tuple(kept) if len(kept) > 1 else (kept[0] if kept else None))
+            else:
+                out.append(part)
+        return P(*out)
+
+    return jax.tree.map(
+        fix, spec_tree, shape_tree, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def constrain(x: jax.Array, logical_axes: Sequence[Optional[str]], rules: Rules):
+    """with_sharding_constraint by logical names (no-op outside jit/mesh)."""
+    try:
+        return jax.lax.with_sharding_constraint(x, rules.spec(logical_axes))
+    except (ValueError, RuntimeError):
+        return x
+
+
+def cache_specs(cache_tree: PyTree, rules: Rules, mesh: Optional[Mesh] = None) -> PyTree:
+    """PartitionSpecs for a (possibly layer-stacked) cache tree.
+
+    Policy: batch over the data axes; the model axis shards the HEADS dim
+    when divisible, else the SEQUENCE dim (flash-decode style: scores stay
+    local, the softmax stats and attn@V psums are tiny).  Seq-sharded
+    caches are written with one-hot selects, not dynamic-update-slice
+    (``attention.update_seq_buffer``) — a traced-index DUS on a sharded
+    dim makes GSPMD materialize the whole cache.  Feature-dim sharding is
+    never used: it turns every score matmul into a full-matrix psum
+    (measured 38 GB/step wire on granite-8b decode_32k).
+    """
+    model_axes = rules.get("cache_heads")  # the model axis tuple
+    batch_axes = rules.get("cache_batch")
+
+    def axis_size(axes: Tuple[str, ...]) -> int:
+        if mesh is None:
+            return 1
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        return n
+
+    msize = axis_size(model_axes)
+    bsize = axis_size(batch_axes)
+    model_part = model_axes[0] if len(model_axes) == 1 else (model_axes or None)
+    batch_part = (
+        batch_axes[0] if len(batch_axes) == 1 else (batch_axes or None)
+    )
+
+    def shard_heads_or_seq(dims: Tuple[int, ...], heads_i: int,
+                           seq_i: Optional[int], batch_i: int = 0
+                           ) -> List[Optional[Any]]:
+        parts: List[Optional[Any]] = [None] * len(dims)
+        if batch_part and dims[batch_i] % max(bsize, 1) == 0 and bsize > 1:
+            parts[batch_i] = batch_part
+        if model_part and msize > 1:
+            if dims[heads_i] % msize == 0 and heads_i != batch_i:
+                parts[heads_i] = model_part
+            elif seq_i is not None and dims[seq_i] % msize == 0:
+                parts[seq_i] = model_part
+        return parts
+
+    def leaf_spec(path, leaf) -> P:
+        keys = [getattr(k, "key", None) for k in path]
+        name = keys[-1]
+        dims = tuple(leaf.shape)
+        if name == "length":
+            return P()
+        base = {"k": 4, "v": 4, "c_kv": 3, "k_rope": 3, "conv": 3, "ssm": 4}.get(name)
+        if base is None:
+            return P(*([None] * len(dims)))
+        off = len(dims) - base  # leading layer-stack dims
+        lead = [None] * off
+        d = dims[off:]
+        if name in ("k", "v"):  # (B, S, KV, D)
+            parts = shard_heads_or_seq(d, heads_i=2, seq_i=1)
+        elif name in ("c_kv", "k_rope"):  # (B, S, R) — latent has no heads;
+            # NEVER shard R (score contraction would psum full matrices) —
+            # heads_i=0 is skipped (== batch_i) so the seq dim shards
+            parts = shard_heads_or_seq(d, heads_i=0, seq_i=1)
+        elif name == "conv":  # (B, k-1, C): channel dim is mlp-like
+            parts = shard_heads_or_seq(d, heads_i=2, seq_i=None)
+        else:  # ssm (B, H, P, N)
+            parts = shard_heads_or_seq(d, heads_i=1, seq_i=None)
+        return P(*(lead + parts))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_tree)
+    return jax.tree_util.tree_unflatten(
+        treedef, [leaf_spec(p, l) for p, l in flat]
+    )

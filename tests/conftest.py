@@ -1,0 +1,13 @@
+import os
+
+# Tests run on the single real CPU device; ONLY the dry-run subprocesses
+# use placeholder devices (they set XLA_FLAGS themselves).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,37 @@
+"""Heat-map diffing (the paper's iterate loop)."""
+
+import numpy as np
+
+from repro.core import analyze
+from repro.core.diff import diff
+from repro.core.trace import GridSampler
+from repro.kernels.gemm import gemm_v00_spec, gemm_v01_spec
+from repro.kernels.gramschm import k3_naive_spec, k3_opt_spec
+
+
+def test_diff_gemm_shows_fix_and_speedup():
+    S = GridSampler((0,), window=32)
+    before = analyze(gemm_v00_spec(1024, 1024, 1024), S)
+    after = analyze(gemm_v01_spec(1024, 1024, 1024), S)
+    d = diff(before, after)
+    assert ("C", "false-sharing") in d.fixed
+    assert not any(p == "false-sharing" for _, p in d.introduced)
+    assert d.tx_before > 0 and d.tx_after > 0
+    assert "thermo diff" in d.summary()
+
+
+def test_diff_with_region_rename():
+    before = analyze(k3_naive_spec(512, 512, 512, k=3), GridSampler(None))
+    after = analyze(k3_opt_spec(512, 512, 512, k=3), GridSampler(None))
+    d = diff(before, after, region_map={"q": "qT"})
+    assert ("q", "strided") in d.fixed
+    assert d.speedup_estimate > 1.5
+
+
+def test_diff_identical_is_clean():
+    S = GridSampler((0,), window=32)
+    hm = analyze(gemm_v00_spec(256, 256, 256), S)
+    hm2 = analyze(gemm_v00_spec(256, 256, 256), S)
+    d = diff(hm, hm2)
+    assert d.fixed == () and d.introduced == ()
+    assert abs(d.speedup_estimate - 1.0) < 1e-9

@@ -1,0 +1,72 @@
+"""Dry-run machinery: cell registry, input specs, and one real compile
+per mesh in a subprocess (512 placeholder devices)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.configs import SHAPES, all_cells, cells, skipped_cells
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_cell_registry_counts():
+    runnable = all_cells()
+    skips = skipped_cells()
+    assert len(runnable) + len(skips) == 40  # 10 archs x 4 shapes
+    assert len(skips) == 8  # long_500k on the 8 full-attention archs
+    assert ("mamba2-2.7b", "long_500k") in runnable
+    assert ("jamba-v0.1-52b", "long_500k") in runnable
+    assert all(s == "long_500k" for _, s, _ in skips)
+
+
+def test_shapes_match_assignment():
+    assert SHAPES["train_4k"].seq_len == 4096 and SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].seq_len == 32768 and SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].seq_len == 32768 and SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288 and SHAPES["long_500k"].global_batch == 1
+
+
+@pytest.mark.parametrize("multi", [False, True], ids=["single16x16", "multi2x16x16"])
+def test_one_cell_compiles_subprocess(multi):
+    """Lower+compile a real full-size cell on the production mesh."""
+    code = f"""
+import json
+from repro.launch.dryrun import run_cell
+res = run_cell("granite-3-2b", "decode_32k", multi_pod={multi}, verbose=False)
+print(json.dumps({{"ok": res["ok"], "chips": res["chips"],
+                   "flops": res["cost"]["flops"],
+                   "wire": res["collectives"]["total_wire_bytes_per_device"]}}))
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("JAX_PLATFORMS", None)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=560)
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["ok"]
+    assert res["chips"] == (512 if multi else 256)
+    assert res["flops"] > 0
+
+
+def test_dryrun_artifacts_complete():
+    """After the sweeps: every runnable cell has a recorded artifact."""
+    art = os.path.join(REPO, "artifacts", "dryrun")
+    if not os.path.isdir(art):
+        pytest.skip("dry-run artifacts not generated yet")
+    meshes = [d for d in os.listdir(art) if os.path.isdir(os.path.join(art, d))]
+    assert "single_16x16" in meshes
+    single = os.path.join(art, "single_16x16")
+    have = {fn[:-5] for fn in os.listdir(single) if fn.endswith(".json")}
+    want = {f"{a}__{s}" for a, s in all_cells()}
+    assert want <= have, want - have
+    # spot-check one artifact's schema
+    with open(os.path.join(single, "granite-8b__train_4k.json")) as f:
+        d = json.load(f)
+    for key in ("roofline", "memory", "collectives", "bound", "model_flops"):
+        assert key in d

@@ -1,0 +1,115 @@
+"""Analyzer invariants (the paper's sector_history_map), property-tested."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.heatmap import Analyzer, SectorHistory, compress_rows
+from repro.core.tiles import TileGeometry
+from repro.core.trace import AccessRecord, RegionInfo, TraceBuffer
+
+
+def _mk_buffer(records, shape=(64, 256), itemsize=4):
+    buf = TraceBuffer()
+    geom = TileGeometry(shape=shape, itemsize=itemsize, name="A")
+    buf.register_region(RegionInfo("A", geom))
+    for pid, touches in records:
+        buf.append(
+            AccessRecord(
+                array="A", site="k/A", space="hbm", kind="load",
+                program_id=pid, touches=tuple(touches),
+            )
+        )
+    return buf
+
+
+@given(
+    data=st.lists(
+        st.tuples(
+            st.integers(0, 15),  # program id
+            st.lists(
+                st.tuples(st.integers(0, 15), st.integers(0, 7)),
+                min_size=1, max_size=8,
+            ),
+        ),
+        min_size=1, max_size=30,
+    )
+)
+@settings(max_examples=50, deadline=None)
+def test_sector_mask_is_or_of_word_masks(data):
+    buf = _mk_buffer([((pid,), touches) for pid, touches in data])
+    an = Analyzer("k", grid=(16,), sampler_desc="full")
+    an.ingest(buf)
+    # invariant on the raw bitmask state
+    for smap in an._maps.values():
+        for hist in smap.values():
+            acc = 0
+            for m in hist.word_masks:
+                acc |= m
+            assert acc == hist.sector_mask
+    hm = an.flush()
+    for rh in hm.regions:
+        for row in rh.rows:
+            assert row.sector_temp >= max(row.word_temps)
+            assert row.sector_temp <= rh.n_programs
+            # union bound: sector temp <= sum of word temps
+            assert row.sector_temp <= max(1, sum(row.word_temps))
+
+
+def test_paper_fig3_arithmetic():
+    """Fig. 3: coalesced = 1 contributor/sector; false sharing = 8."""
+    # (a) one program touches all 8 words of sector 0
+    buf = _mk_buffer([((0,), [(0, w) for w in range(8)])])
+    an = Analyzer("k", (8,), "full")
+    an.ingest(buf)
+    row = an.flush().regions[0].rows[0]
+    assert row.sector_temp == 1 and set(row.word_temps) == {1}
+    # (b) eight programs each touch a different word of sector 0
+    buf = _mk_buffer([((p,), [(0, p)]) for p in range(8)])
+    an = Analyzer("k", (8,), "full")
+    an.ingest(buf)
+    row = an.flush().regions[0].rows[0]
+    assert row.sector_temp == 8 and set(row.word_temps) == {1}
+
+
+def test_transaction_model_matches_paper():
+    """Coalesced: 1 tile transfer; false-shared: 8 transfers."""
+    coalesced = _mk_buffer([((0,), [(0, w) for w in range(8)])])
+    shared = _mk_buffer([((p,), [(0, p)]) for p in range(8)])
+    for buf, expect in ((coalesced, 1), (shared, 8)):
+        an = Analyzer("k", (8,), "full")
+        an.ingest(buf)
+        assert an.flush().sector_transactions("A") == expect
+
+
+def test_row_compression_lossless():
+    rows = []
+    buf = _mk_buffer(
+        [((0,), [(t, w) for w in range(8)]) for t in range(10)]
+        + [((1,), [(10, 0)])]
+    )
+    an = Analyzer("k", (16,), "full")
+    an.ingest(buf)
+    hm = an.flush()
+    for rh in hm.regions:
+        comp = compress_rows(rh.rows)
+        assert sum(n for _, n in comp) == len(rh.rows)
+        # identical consecutive signatures must collapse
+        assert len(comp) == 2  # tags 0..9 identical, tag 10 distinct
+
+
+def test_waste_ratio():
+    # strided: 1 of 8 words used per sector -> waste 8x
+    buf = _mk_buffer([((p,), [(t, 0) for t in range(8)]) for p in range(4)])
+    an = Analyzer("k", (4,), "full")
+    an.ingest(buf)
+    hm = an.flush()
+    assert abs(hm.waste_ratio("A") - 8.0) < 1e-9
+
+
+def test_valid_words_edge_tiles():
+    # array of 4 rows (half a tile): edge sectors have 4 valid words
+    buf = _mk_buffer([((0,), [(0, 0)])], shape=(4, 128))
+    an = Analyzer("k", (1,), "full")
+    an.ingest(buf)
+    rh = an.flush().regions[0]
+    assert rh.valid_words(0) == 4

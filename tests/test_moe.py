@@ -1,0 +1,85 @@
+"""MoE: ragged/capacity dispatch vs dense oracle, drops, aux loss."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.moe import (
+    MoEConfig,
+    moe_apply,
+    moe_apply_capacity,
+    moe_apply_ragged,
+    moe_defs,
+    moe_ref,
+)
+from repro.models.params import init_params
+
+
+def _setup(**kw):
+    cfg = MoEConfig(d_model=16, d_ff=32, n_experts=4, top_k=2,
+                    n_shared_experts=1, **kw)
+    params = init_params(moe_defs(cfg), jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (2, 12, 16))
+    return cfg, params, x
+
+
+def test_ragged_matches_dense_oracle():
+    cfg, params, x = _setup()
+    y, aux = moe_apply_ragged(params, x, cfg)
+    y2, aux2 = moe_ref(params, x, cfg)
+    np.testing.assert_allclose(y, y2, atol=1e-5, rtol=1e-4)
+    np.testing.assert_allclose(aux, aux2, atol=1e-6, rtol=1e-5)
+
+
+def test_capacity_high_cap_matches_oracle():
+    cfg, params, x = _setup(capacity_factor=8.0, moe_impl="capacity")
+    y, _ = moe_apply_capacity(params, x, cfg)
+    y2, _ = moe_ref(params, x, cfg)
+    np.testing.assert_allclose(y, y2, atol=1e-5, rtol=1e-4)
+
+
+def test_capacity_drops_tokens_when_tight():
+    cfg, params, x = _setup(capacity_factor=0.1, moe_impl="capacity")
+    y_tight, _ = moe_apply_capacity(params, x, cfg)
+    y_full, _ = moe_ref(params, x, cfg)
+    # with cap this tight some tokens must differ (drops), but none NaN
+    assert np.isfinite(np.asarray(y_tight)).all()
+    assert float(jnp.abs(y_tight - y_full).max()) > 1e-6
+
+
+def test_top1_and_no_shared():
+    cfg = MoEConfig(d_model=16, d_ff=32, n_experts=4, top_k=1)
+    params = init_params(moe_defs(cfg), jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (1, 8, 16))
+    y, aux = moe_apply_ragged(params, x, cfg)
+    y2, _ = moe_ref(params, x, cfg)
+    np.testing.assert_allclose(y, y2, atol=1e-5, rtol=1e-4)
+
+
+def test_aux_loss_positive_and_bounded():
+    cfg, params, x = _setup()
+    _, aux = moe_apply(params, x, cfg)
+    assert 0.0 <= float(aux) < 1.0
+
+
+def test_moe_grads_flow_through_dispatch():
+    cfg, params, x = _setup()
+
+    def loss(p):
+        y, aux = moe_apply_ragged(p, x, cfg)
+        return jnp.sum(y**2) + aux
+
+    g = jax.grad(loss)(params)
+    # every expert weight that received tokens must have nonzero grad
+    gw = np.asarray(jnp.abs(g["w_gate"]).sum(axis=(1, 2)))
+    assert (gw > 0).sum() >= 2  # at least half the experts hit
+    assert all(np.isfinite(np.asarray(v)).all() for v in jax.tree.leaves(g))
+
+
+def test_ep_falls_back_without_mesh():
+    """moe_impl='ep' on a single device (no active rules) must still work."""
+    cfg, params, x = _setup(moe_impl="ep", capacity_factor=8.0)
+    y, _ = moe_apply(params, x, cfg)
+    y2, _ = moe_ref(params, x, cfg)
+    np.testing.assert_allclose(y, y2, atol=1e-5, rtol=1e-4)

@@ -1,0 +1,83 @@
+"""Optimizers, schedules, clipping, quantized moments."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import (
+    adamw,
+    clip_by_global_norm,
+    constant,
+    cosine_warmup,
+    global_norm,
+    linear_warmup,
+    lion,
+)
+
+
+def _rosenbrock_ish(params):
+    x, y = params["x"], params["y"]
+    return jnp.sum((1 - x) ** 2) + 10 * jnp.sum((y - x**2) ** 2)
+
+
+@pytest.mark.parametrize("make_opt", [
+    lambda: adamw(constant(3e-2)),
+    lambda: adamw(constant(3e-2), state_dtype="bf16"),
+    lambda: adamw(constant(3e-2), state_dtype="int8"),
+    lambda: lion(constant(3e-3)),
+])
+def test_optimizer_minimizes(make_opt):
+    opt = make_opt()
+    params = {"x": jnp.zeros(4), "y": jnp.zeros(4)}
+    state = opt.init(params)
+    loss0 = float(_rosenbrock_ish(params))
+
+    @jax.jit
+    def step(params, state):
+        loss, g = jax.value_and_grad(_rosenbrock_ish)(params)
+        params, state = opt.update(g, state, params)
+        return params, state, loss
+
+    for _ in range(200):
+        params, state, loss = step(params, state)
+    assert float(loss) < 0.2 * loss0
+
+
+def test_adamw_weight_decay_shrinks():
+    opt = adamw(constant(1e-2), weight_decay=0.5)
+    params = {"w": jnp.ones(8) * 10.0}
+    state = opt.init(params)
+    zeros = {"w": jnp.zeros(8)}
+    for _ in range(10):
+        params, state = opt.update(zeros, state, params)
+    assert float(jnp.abs(params["w"]).max()) < 10.0
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.ones(100) * 10.0}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert abs(float(global_norm(clipped)) - 1.0) < 1e-5
+    assert float(norm) == pytest.approx(100.0, rel=1e-5)
+    small = {"a": jnp.ones(4) * 0.01}
+    unclipped, _ = clip_by_global_norm(small, 1.0)
+    np.testing.assert_allclose(unclipped["a"], small["a"], rtol=1e-6)
+
+
+def test_schedules():
+    cos = cosine_warmup(1.0, 10, 100, floor=0.1)
+    assert float(cos(jnp.asarray(0))) == 0.0
+    assert float(cos(jnp.asarray(10))) == pytest.approx(1.0)
+    assert float(cos(jnp.asarray(100))) == pytest.approx(0.1, abs=1e-6)
+    lin = linear_warmup(2.0, 4)
+    assert float(lin(jnp.asarray(2))) == pytest.approx(1.0)
+    assert float(lin(jnp.asarray(8))) == pytest.approx(2.0)
+
+
+def test_int8_state_memory_is_quarter():
+    opt = adamw(constant(1e-3), state_dtype="int8")
+    params = {"w": jnp.zeros((128, 128))}
+    st = opt.init(params)
+    assert st.m["w"].dtype == jnp.int8
+    assert st.v["w"].dtype == jnp.int8
+    assert st.mu is not None and st.nu is not None

@@ -1,0 +1,192 @@
+"""Runtime: train loop, grad-accum equivalence, compression, fault, serve."""
+
+import os
+import signal
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.data import DataConfig, SyntheticSource, TokenPipeline
+from repro.models import ModelConfig, build_model
+from repro.optim import adamw, constant, cosine_warmup
+from repro.parallel.compression import CompressionConfig, compress, decompress, init_error_buffer
+from repro.runtime import (
+    Preempted,
+    PreemptionHandler,
+    Request,
+    ServeConfig,
+    Server,
+    StragglerMonitor,
+    TrainConfig,
+    build_train_step,
+    init_state,
+    retry,
+    run,
+)
+
+
+def _tiny():
+    cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=32,
+                      n_heads=4, n_kv_heads=2, d_ff=64, vocab=128,
+                      dtype=jnp.float32)
+    return cfg, build_model(cfg)
+
+
+def test_training_reduces_loss():
+    cfg, m = _tiny()
+    opt = adamw(cosine_warmup(5e-3, 5, 60))
+    tc = TrainConfig()
+    state = init_state(m.init(jax.random.key(0)), opt, tc)
+    step = build_train_step(lambda p, t, l: m.loss(p, t, l), opt, tc)
+    dc = DataConfig(global_batch=8, seq_len=24, vocab=cfg.vocab)
+    pipe = TokenPipeline(SyntheticSource(dc))
+    first = None
+    for i, (t, l) in zip(range(40), pipe):
+        state, metrics = step(state, jnp.asarray(t), jnp.asarray(l))
+        if first is None:
+            first = float(metrics["loss"])
+    assert float(metrics["loss"]) < first - 0.5
+
+
+def test_grad_accum_equivalence():
+    """accum=2 over batch 8 == accum=1 over the same batch (same grads)."""
+    cfg, m = _tiny()
+    opt = adamw(constant(1e-2))
+    params = m.init(jax.random.key(0))
+    dc = DataConfig(global_batch=8, seq_len=16, vocab=cfg.vocab)
+    tokens, labels = next(TokenPipeline(SyntheticSource(dc)))
+    t, l = jnp.asarray(tokens), jnp.asarray(labels)
+
+    s1 = build_train_step(lambda p, a, b: m.loss(p, a, b), opt,
+                          TrainConfig(grad_accum=1), donate=False)
+    s2 = build_train_step(lambda p, a, b: m.loss(p, a, b), opt,
+                          TrainConfig(grad_accum=2), donate=False)
+    st1, _ = s1(init_state(params, opt, TrainConfig()), t, l)
+    st2, _ = s2(init_state(params, opt, TrainConfig(grad_accum=2)), t, l)
+    for a, b in zip(jax.tree.leaves(st1.params), jax.tree.leaves(st2.params)):
+        np.testing.assert_allclose(a, b, atol=2e-6, rtol=2e-5)
+
+
+@pytest.mark.parametrize("mode", ["bf16", "int8"])
+def test_compression_roundtrip_and_error_feedback(mode):
+    cfg = CompressionConfig(mode=mode)
+    g = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(64, 64)) * 1e-3,
+                          jnp.float32)}
+    err = init_error_buffer(g, cfg)
+    wire, err2 = compress(g, err, cfg)
+    deq = decompress(wire, cfg)
+    # quantization error is bounded and captured by the error buffer
+    resid = float(jnp.abs(deq["w"] + err2["w"] - g["w"]).max())
+    assert resid < 1e-6
+    if mode == "int8":
+        assert wire["w"][0].dtype == jnp.int8
+
+
+def test_compressed_training_converges():
+    cfg, m = _tiny()
+    opt = adamw(constant(5e-3))
+    tc = TrainConfig(compression=CompressionConfig(mode="int8"))
+    state = init_state(m.init(jax.random.key(0)), opt, tc)
+    step = build_train_step(lambda p, t, l: m.loss(p, t, l), opt, tc)
+    dc = DataConfig(global_batch=8, seq_len=16, vocab=cfg.vocab)
+    pipe = TokenPipeline(SyntheticSource(dc))
+    losses = []
+    for i, (t, l) in zip(range(30), pipe):
+        state, metrics = step(state, jnp.asarray(t), jnp.asarray(l))
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] - 0.3
+
+
+def test_straggler_monitor_flags_outlier():
+    mon = StragglerMonitor(threshold=6.0, warmup=5)
+    for i in range(30):
+        mon.observe(i, 0.1 + 0.001 * (i % 3) if i != 20 else 0.5)
+    assert any(e.step == 20 for e in mon.events)
+    # the 5x outlier dominates every natural-jitter event by z-score
+    assert max(mon.events, key=lambda e: e.zscore).step == 20
+
+
+def test_preemption_checkpoint_and_restart(tmp_path):
+    cfg, m = _tiny()
+    opt = adamw(constant(1e-3))
+    tc = TrainConfig()
+    state = init_state(m.init(jax.random.key(0)), opt, tc)
+    step = build_train_step(lambda p, t, l: m.loss(p, t, l), opt, tc, donate=False)
+    dc = DataConfig(global_batch=4, seq_len=16, vocab=cfg.vocab)
+    pipe = TokenPipeline(SyntheticSource(dc))
+    mgr = CheckpointManager(str(tmp_path))
+    handler = PreemptionHandler().register(signals=(signal.SIGUSR1,))
+    captured = {}
+
+    def state_fn():
+        return {"params": captured["state"].params}, {"data_step": pipe.state()}
+
+    def capture_hook(i, st, metrics):
+        captured["state"] = st
+        if i == 3:
+            os.kill(os.getpid(), signal.SIGUSR1)  # simulated preemption
+
+    hooks = (capture_hook, handler.checkpoint_hook(mgr, state_fn))
+    with pytest.raises(Preempted):
+        run(step, state, pipe, 10, hooks)
+    handler.unregister()
+    # the emergency checkpoint is restorable and data position is saved
+    assert mgr.latest_step() is not None
+    target = {"params": jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), state.params)}
+    restored, ck, extra = mgr.restore(target)
+    assert extra["data_step"] >= 4
+
+
+def test_retry_backoff():
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise IOError("transient")
+        return "ok"
+
+    assert retry(flaky, attempts=4, base_delay=0.001)() == "ok"
+    assert calls["n"] == 3
+
+
+def test_server_matches_direct_decode():
+    cfg, m = _tiny()
+    params = m.init(jax.random.key(0))
+    prompt = np.array([3, 7, 11], np.int32)
+    # direct greedy
+    caches = m.init_caches(1, 32, dtype=jnp.float32)
+    lg, caches = m.prefill(params, jnp.asarray(prompt)[None], caches)
+    toks = [int(jnp.argmax(lg[0, -1]))]
+    for _ in range(4):
+        lg, caches = m.decode_step(params, jnp.asarray([[toks[-1]]]), caches)
+        toks.append(int(jnp.argmax(lg[0, 0])))
+    # server with 2 slots and an interfering second request
+    srv = Server(m, params, ServeConfig(batch_slots=2, max_seq=32),
+                 dtype=jnp.float32)
+    r0 = Request(rid=0, prompt=prompt, max_tokens=5)
+    r1 = Request(rid=1, prompt=np.array([1, 2], np.int32), max_tokens=3)
+    srv.submit(r0)
+    srv.submit(r1)
+    srv.run_until_done()
+    assert r0.out_tokens == toks
+    assert len(r1.out_tokens) == 3
+
+
+def test_server_continuous_batching_refills():
+    cfg, m = _tiny()
+    params = m.init(jax.random.key(0))
+    srv = Server(m, params, ServeConfig(batch_slots=2, max_seq=32),
+                 dtype=jnp.float32)
+    reqs = [Request(rid=i, prompt=np.array([i + 1], np.int32), max_tokens=3)
+            for i in range(5)]
+    for r in reqs:
+        srv.submit(r)
+    srv.run_until_done()
+    assert all(r.done for r in reqs)
+    assert all(len(r.out_tokens) == 3 for r in reqs)

@@ -1,0 +1,83 @@
+"""Tile geometry properties (word/sector mapping)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.tiles import LANES, TileGeometry, block_to_2d, sublanes_for
+
+
+def test_sublanes_by_itemsize():
+    assert sublanes_for(4) == 8
+    assert sublanes_for(2) == 16
+    assert sublanes_for(1) == 32
+    assert sublanes_for(8) == 4
+    with pytest.raises(ValueError):
+        sublanes_for(3)
+
+
+@given(
+    rows=st.integers(1, 64),
+    cols=st.integers(1, 512),
+    itemsize=st.sampled_from([1, 2, 4, 8]),
+)
+@settings(max_examples=50, deadline=None)
+def test_tag_roundtrip(rows, cols, itemsize):
+    g = TileGeometry(shape=(rows, cols), itemsize=itemsize)
+    for r in range(0, rows, max(1, rows // 5)):
+        for c in range(0, cols, max(1, cols // 5)):
+            tag = g.sector_tag(r, c)
+            r0, c0 = g.tag_to_coords(tag)
+            assert r0 <= r < r0 + g.sublanes
+            assert c0 <= c < c0 + LANES
+            assert 0 <= tag < g.n_sectors
+
+
+@given(
+    rows=st.integers(1, 48),
+    cols=st.integers(1, 300),
+    itemsize=st.sampled_from([2, 4]),
+)
+@settings(max_examples=30, deadline=None)
+def test_full_slice_touches_every_word_once(rows, cols, itemsize):
+    g = TileGeometry(shape=(rows, cols), itemsize=itemsize)
+    touches = list(g.slice_to_touches(0, rows, 0, cols))
+    # every (row, lane-tile) appears exactly once
+    assert len(touches) == rows * g.lane_tiles
+    assert len(set(touches)) == len(touches)
+
+
+def test_slice_clipping():
+    g = TileGeometry(shape=(16, 256), itemsize=4)
+    assert list(g.slice_to_touches(-5, 0, 0, 10)) == []
+    assert list(g.slice_to_touches(0, 1, 300, 400)) == []
+    t = list(g.slice_to_touches(14, 100, 0, 128))
+    assert len(t) == 2  # rows 14, 15 only
+
+
+def test_1d_run_walks_sublane_rows():
+    g = TileGeometry(shape=(1025,), itemsize=4)
+    # 1024 int32 elements = 8 lane-rows = exactly 1 tile, aligned
+    t = list(g.run_to_touches(0, 1024))
+    assert len(t) == 8
+    assert len({tag for tag, _ in t}) == 1
+    # shifted by 1 element -> straddles into a 9th word / 2nd tile
+    t2 = list(g.run_to_touches(1, 1025))
+    assert len(t2) == 9
+    assert len({tag for tag, _ in t2}) == 2
+
+
+def test_alignment_check():
+    g = TileGeometry(shape=(32, 256), itemsize=4)
+    assert g.is_aligned_slice(0, 8, 0, 128)
+    assert not g.is_aligned_slice(1, 9, 0, 128)
+    assert not g.is_aligned_slice(0, 8, 64, 192)
+    assert g.is_aligned_slice(24, 32, 128, 256)
+
+
+def test_block_to_2d_contiguous():
+    # 3-D operand (4, 8, 128), block (1, 8, 128): leading dim flattens
+    r0, r1, c0, c1 = block_to_2d((4, 8, 128), (2, 0, 0), (1, 8, 128))
+    assert (r0, r1, c0, c1) == (16, 24, 0, 128)
+    with pytest.raises(ValueError):
+        block_to_2d((4, 8, 128), (0, 0, 0), (2, 4, 128))  # non-contiguous
