@@ -1,4 +1,5 @@
-"""Table II reproduction: profiling overhead, block-sampled vs full-trace.
+"""Table II reproduction: profiling overhead, block-sampled vs full-trace,
+plus the columnar-engine collection-throughput metric.
 
 Paper: CUTHERMO's thread-block sampling keeps overhead at 1.07x-57x vs
 NCU's 1.5x-755x.  TPU analogue: the Level-1 collector's cost is the
@@ -6,28 +7,38 @@ grid walk — block-sampling walks ONE window; the full-trace walk (the
 NCU-ish exhaustive reference) walks every program.  We report, per
 case-study kernel: base kernel wall time (jit, CPU), + sampled-profile
 time, + full-trace time, and the two overhead ratios.
+
+Throughput section: collection+analysis throughput (records/s and
+programs/s) of the columnar engine on a FULL-GRID 4096x4096x4096 GEMM
+trace, against the seed per-record engine (``repro.core._reference``).
+The reference is timed on a sampled window (its cost is linear in
+programs — the full grid would take minutes by construction) and its
+programs/s extrapolated; pass ``--full-reference`` to time it on the
+whole grid instead.  Target: >= 10x programs/s.
+
+Usage:
+    PYTHONPATH=src python benchmarks/bench_overhead.py              # both
+    PYTHONPATH=src python benchmarks/bench_overhead.py --throughput-only
+    PYTHONPATH=src python benchmarks/bench_overhead.py --smoke      # CI
 """
 
 from __future__ import annotations
 
+import sys
 import time
 from typing import List, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import collect
+from repro.core._reference import ReferenceAnalyzer, collect_reference
+from repro.core.heatmap import Analyzer
 from repro.core.trace import GridSampler
-import repro.kernels.ops as ops
-from repro.kernels.gemm import gemm_v00_spec, gemm_v01_spec
-from repro.kernels.gramschm import k3_naive_block_spec
-from repro.kernels.histogram import hist_opt_spec
-from repro.kernels.spmv import spmv_csr_spec
-from repro.kernels.ttm import ttm_scratch_spec
 
 
 def _time(fn, *args, reps=3):
+    import jax
+
     fn(*args)  # compile/warm
     t0 = time.perf_counter()
     for _ in range(reps):
@@ -36,6 +47,16 @@ def _time(fn, *args, reps=3):
 
 
 def run() -> List[Tuple[str, float, str]]:
+    import jax
+    import jax.numpy as jnp
+
+    import repro.kernels.ops as ops
+    from repro.kernels.gemm import gemm_v00_spec, gemm_v01_spec
+    from repro.kernels.gramschm import k3_naive_block_spec
+    from repro.kernels.histogram import hist_opt_spec
+    from repro.kernels.spmv import spmv_csr_spec
+    from repro.kernels.ttm import ttm_scratch_spec
+
     key = jax.random.key(0)
     out = []
     print("kernel,base_s,sampled_s,full_s,sampled_x,full_x,records_sampled,records_full")
@@ -117,5 +138,73 @@ def run() -> List[Tuple[str, float, str]]:
     return out
 
 
+def _engine_pass(collect_fn, analyzer_cls, spec, sampler):
+    """One collect -> ingest -> flush pass; returns (wall_s, stats, hm)."""
+    t0 = time.perf_counter()
+    buf, stats = collect_fn(spec, sampler)
+    an = analyzer_cls(spec.name, spec.grid, sampler.describe())
+    an.ingest(buf)
+    hm = an.flush()
+    return time.perf_counter() - t0, stats, hm
+
+
+def run_throughput(
+    m: int = 4096, full_reference: bool = False
+) -> List[Tuple[str, float, str]]:
+    """Collection+analysis throughput: columnar engine vs seed per-record
+    path on a full-grid (m x m x m) GEMM trace."""
+    from repro.kernels.gemm import gemm_v01_spec
+
+    spec = gemm_v01_spec(m, m, m)
+    grid_programs = spec.grid[0]
+
+    wall_v, stats_v, hm_v = _engine_pass(
+        collect, Analyzer, spec, GridSampler(None)
+    )
+    prog_s_v = stats_v.programs / wall_v
+    rec_s_v = stats_v.records / wall_v
+
+    if full_reference:
+        ref_sampler = GridSampler(None)
+    else:
+        # the reference path is linear in programs: time one 32-program
+        # window and extrapolate programs/s (the full grid takes minutes
+        # by construction — that slowness is what this metric measures)
+        ref_sampler = GridSampler((0,), window=32)
+    wall_r, stats_r, hm_r = _engine_pass(
+        collect_reference, ReferenceAnalyzer, spec, ref_sampler
+    )
+    prog_s_r = stats_r.programs / wall_r
+    rec_s_r = stats_r.records / wall_r
+    speedup = prog_s_v / prog_s_r
+
+    print(f"-- collection+analysis throughput: gemm_v01 {m}x{m}x{m}, "
+          f"full grid = {grid_programs} programs --")
+    print("engine,programs,records,touch_events,wall_s,programs_per_s,records_per_s")
+    print(f"columnar,{stats_v.programs},{stats_v.records},"
+          f"{stats_v.touch_events},{wall_v:.4f},{prog_s_v:.0f},{rec_s_v:.0f}")
+    ref_tag = "full" if full_reference else "window32-extrapolated"
+    print(f"reference({ref_tag}),{stats_r.programs},{stats_r.records},"
+          f"-,{wall_r:.4f},{prog_s_r:.1f},{rec_s_r:.1f}")
+    print(f"throughput_speedup,{speedup:.1f}x,(target >= 10x)")
+    if speedup < 10:
+        print("WARNING: columnar engine below the 10x throughput target",
+              file=sys.stderr)
+    # sanity: both engines agree on the modeled transactions they saw
+    if full_reference:
+        assert hm_v.sector_transactions() == hm_r.sector_transactions()
+    return [
+        ("collect_throughput_programs_per_s", prog_s_v,
+         f"{speedup:.1f}x over per-record reference ({ref_tag})"),
+        ("collect_throughput_records_per_s", rec_s_v,
+         f"full-grid gemm {m}^3, {stats_v.touch_events} touch events"),
+    ]
+
+
 if __name__ == "__main__":
-    run()
+    argv = set(sys.argv[1:])
+    smoke = "--smoke" in argv
+    size = 1024 if smoke else 4096
+    results = run_throughput(m=size, full_reference="--full-reference" in argv)
+    if "--throughput-only" not in argv and not smoke:
+        results += run()

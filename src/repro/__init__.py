@@ -1,0 +1,3 @@
+"""CUTHERMO reproduction: TPU memory heat-map profiling for Pallas kernels."""
+
+__version__ = "0.1.0"

@@ -8,11 +8,21 @@ collector therefore "instruments" a kernel by evaluating every operand's
 ``index_map`` for every sampled grid program — an exact, zero-overhead
 reconstruction of the transfers the hardware will issue.
 
+The walk is columnar: the sampled grid is materialized as one (P, ndim)
+coordinate array, each operand's ``index_map`` is evaluated for the
+whole batch (vectorized when the map is arithmetic, per-program
+fallback otherwise), programs are grouped by distinct block key with
+``np.unique``, and ONE broadcast ``TraceChunk`` is emitted per key —
+the touch set is computed once and shared by every program mapping to
+that block.  This is what makes full-grid traces of production-sized
+kernels practical (see ``benchmarks/bench_overhead.py``).
+
 Level 2 — for data-dependent addressing (gathers/scatters), where the
 BlockSpec view is incomplete, kernels compiled with ``trace=True`` write
 touched indices into an extra output buffer (CUTHERMO's GPU-queue trace
 packer, realized as a normal kernel output).  ``drain_dynamic`` converts
-the concrete index arrays into trace records.
+the concrete index arrays into trace records via bulk ``divmod`` /
+``np.unique`` over the whole (programs x slots) index matrix.
 """
 
 from __future__ import annotations
@@ -26,11 +36,13 @@ import numpy as np
 from .heatmap import Analyzer, Heatmap
 from .tiles import TileGeometry, block_to_2d
 from .trace import (
-    AccessRecord,
     GridSampler,
     RegionInfo,
+    SiteInfo,
     TraceBuffer,
-    sampled_grid,
+    linearize_array,
+    sampled_grid_array,
+    unique_pairs,
 )
 
 IndexMap = Callable[..., Tuple[int, ...]]
@@ -100,25 +112,74 @@ class CollectStats:
     records: int = 0
     programs: int = 0
     wall_s: float = 0.0
+    touch_events: int = 0  # logical (record, touch) events represented
 
 
-def _touches_for_block(
-    spec: OperandSpec, program_id: Tuple[int, ...]
-) -> Tuple[Tuple[int, int], ...]:
-    idx = spec.index_map(*program_id)
-    if isinstance(idx, int):
-        idx = (idx,)
-    geom = TileGeometry(
-        shape=spec.shape, itemsize=np.dtype(spec.dtype).itemsize, name=spec.name
-    )
+def _normalize_index(idx) -> Tuple:
+    if isinstance(idx, tuple):
+        return idx
+    return (idx,)
+
+
+def _eval_index_map_batch(
+    index_map: IndexMap, pids: np.ndarray
+) -> np.ndarray:
+    """Evaluate an index_map for a (P, ndim) batch of program coords.
+
+    Tries one vectorized call with array arguments (exact for the
+    arithmetic lambdas BlockSpecs are made of), validated against scalar
+    evaluation of the batch's first and last program; falls back to the
+    per-program loop for maps that don't broadcast.
+    Returns (P, k) int64 block coordinates.
+    """
+    p, ndim = pids.shape
+
+    def _scalar(row: np.ndarray) -> Tuple[int, ...]:
+        idx = _normalize_index(index_map(*[int(x) for x in row]))
+        return tuple(int(i) for i in idx)
+
+    if p > 1:
+        try:
+            out = _normalize_index(index_map(*[pids[:, d] for d in range(ndim)]))
+            cols = [
+                np.broadcast_to(np.asarray(o, dtype=np.int64), (p,))
+                for o in out
+            ]
+            arr = np.stack(cols, axis=1)
+            lo, hi = _scalar(pids[0]), _scalar(pids[-1])
+            if (
+                len(lo) == arr.shape[1]
+                and tuple(arr[0].tolist()) == lo
+                and tuple(arr[-1].tolist()) == hi
+            ):
+                return arr
+        except Exception:
+            pass
+    rows = [_scalar(pids[i]) for i in range(p)]
+    return np.asarray(rows, dtype=np.int64).reshape(p, -1)
+
+
+def _touch_arrays_for_key(
+    spec: OperandSpec, idx: Tuple[int, ...]
+) -> Tuple[np.ndarray, np.ndarray]:
+    """(tags, words) touched by one block key (vectorized geometry walk)."""
+    geom = spec.geometry
     if len(spec.shape) == 1:
         # 1-D operand: a contiguous element run walking (1,128) lane rows.
         # origin[1] models a misaligned view (e.g. rowOffsets shifted by +1).
         start = int(idx[0]) * int(spec.block_shape[-1]) + spec.origin[1]
-        return tuple(geom.run_to_touches(start, start + int(spec.block_shape[-1])))
+        return geom.run_to_touch_arrays(start, start + int(spec.block_shape[-1]))
     r0, r1, c0, c1 = block_to_2d(spec.shape, idx, spec.block_shape)
     orow, ocol = spec.origin
-    return tuple(geom.slice_to_touches(r0 + orow, r1 + orow, c0 + ocol, c1 + ocol))
+    return geom.slice_to_touch_arrays(r0 + orow, r1 + orow, c0 + ocol, c1 + ocol)
+
+
+def _dedupe_touches(
+    tags: np.ndarray, words: np.ndarray, sublanes: int
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Unique (tag, word) pairs in ascending (tag, word) order."""
+    key = np.unique(tags * sublanes + words)
+    return key // sublanes, key % sublanes
 
 
 def collect(
@@ -142,83 +203,96 @@ def collect(
     dynamic_names = {name for name, _ in kernel.dynamic}
     dyn_fns = dict(kernel.dynamic)
 
-    # memoize index_map -> touches: many programs map to the same block
-    touch_cache: Dict[Tuple[str, Tuple[int, ...]], Tuple[Tuple[int, int], ...]] = {}
+    pids = sampled_grid_array(kernel.grid, sampler)
+    n_programs = int(pids.shape[0])
+    stats.programs = n_programs
+    if n_programs == 0:
+        stats.wall_s = time.perf_counter() - t0
+        return buf, stats
 
-    first_pid = True
-    for pid in sampled_grid(kernel.grid, sampler):
-        stats.programs += 1
-        for op in kernel.operands:
-            if op.name in dynamic_names:
-                continue  # handled below with concrete indices
-            if op.once and not first_pid:
-                continue
-            idx = op.index_map(*pid)
-            if isinstance(idx, int):
-                idx = (idx,)
-            key = (op.name, tuple(int(i) for i in idx))
-            touches = touch_cache.get(key)
-            if touches is None:
-                touches = _touches_for_block(op, pid)
-                touch_cache[key] = touches
-            buf.append(
-                AccessRecord(
-                    array=op.name,
-                    site=f"{kernel.name}/{op.name}",
-                    space=op.space,
-                    kind=op.kind,
-                    program_id=pid,
-                    touches=touches,
-                )
+    # -- static operands: group programs by distinct block key ---------------
+    for op in kernel.operands:
+        if op.name in dynamic_names:
+            continue  # handled below with concrete indices
+        site = SiteInfo(op.name, f"{kernel.name}/{op.name}", op.space, op.kind)
+        group = TraceBuffer.new_group()
+        sel = pids[:1] if op.once else pids
+        keys = _eval_index_map_batch(op.index_map, sel)
+        ukeys, inverse = np.unique(keys, axis=0, return_inverse=True)
+        order = np.argsort(inverse, kind="stable")
+        counts = np.bincount(inverse, minlength=len(ukeys))
+        bounds = np.zeros(len(ukeys) + 1, dtype=np.int64)
+        np.cumsum(counts, out=bounds[1:])
+        for g in range(len(ukeys)):
+            gsel = sel[order[bounds[g] : bounds[g + 1]]]
+            tags, words = _touch_arrays_for_key(
+                op, tuple(int(x) for x in ukeys[g])
             )
-        for sc in kernel.scratch:
-            geom = sc.geometry
-            slices: Iterable[Tuple[int, int, int, int]]
-            if sc.access_model is None:
-                r, c = geom.shape2d
-                slices = [(0, r, 0, c)]
-            else:
-                slices = sc.access_model(pid)
-            touches_list: List[Tuple[int, int]] = []
-            for r0, r1, c0, c1 in slices:
-                touches_list.extend(geom.slice_to_touches(r0, r1, c0, c1))
-            buf.append(
-                AccessRecord(
-                    array=sc.name,
-                    site=f"{kernel.name}/{sc.name}",
-                    space="vmem_scratch",
-                    kind=sc.kind,
-                    program_id=pid,
-                    touches=tuple(touches_list),
+            buf.append_block(site, gsel, tags, words, group=group)
+
+    # -- scratch: group programs by their access-model slice set -------------
+    for sc in kernel.scratch:
+        site = SiteInfo(sc.name, f"{kernel.name}/{sc.name}", "vmem_scratch",
+                        sc.kind)
+        group = TraceBuffer.new_group()
+        geom = sc.geometry
+        if sc.access_model is None:
+            r, c = geom.shape2d
+            tags, words = geom.slice_to_touch_arrays(0, r, 0, c)
+            buf.append_block(site, pids, tags, words, group=group)
+        else:
+            by_slices: Dict[Tuple, List[int]] = {}
+            for i in range(n_programs):
+                pid = tuple(int(x) for x in pids[i])
+                key = tuple(
+                    tuple(int(v) for v in s) for s in sc.access_model(pid)
                 )
-            )
-        # dynamic operands: concrete per-program indices
-        for op in kernel.operands:
-            fn = dyn_fns.get(op.name)
-            if fn is None:
-                continue
-            ctx = dynamic_context or {}
-            flat_idx = np.asarray(list(fn(pid, **ctx)), dtype=np.int64)
-            geom = op.geometry
-            rows, cols = geom.shape2d
-            touches_set = set()
-            for fi in flat_idx:
-                r, c = divmod(int(fi), cols) if cols else (0, 0)
-                r += op.origin[0]
-                c += op.origin[1]
-                touches_set.add((geom.sector_tag(r, c), geom.word_offset(r, c)))
-            buf.append(
-                AccessRecord(
-                    array=op.name,
-                    site=f"{kernel.name}/{op.name}",
-                    space=op.space,
-                    kind=op.kind,
-                    program_id=pid,
-                    touches=tuple(sorted(touches_set)),
-                )
-            )
-        first_pid = False
+                by_slices.setdefault(key, []).append(i)
+            for slices, idxs in by_slices.items():
+                parts = [
+                    geom.slice_to_touch_arrays(r0, r1, c0, c1)
+                    for r0, r1, c0, c1 in slices
+                ]
+                if parts:
+                    tags = np.concatenate([t for t, _ in parts])
+                    words = np.concatenate([w for _, w in parts])
+                else:
+                    tags = np.empty(0, np.int64)
+                    words = np.empty(0, np.int64)
+                tags, words = _dedupe_touches(tags, words, geom.sublanes)
+                buf.append_block(site, pids[idxs], tags, words, group=group)
+
+    # -- dynamic operands: concrete per-program indices (CSR chunk) ----------
+    for op in kernel.operands:
+        fn = dyn_fns.get(op.name)
+        if fn is None:
+            continue
+        site = SiteInfo(op.name, f"{kernel.name}/{op.name}", op.space, op.kind)
+        group = TraceBuffer.new_group()
+        geom = op.geometry
+        ctx = dynamic_context or {}
+        tag_parts: List[np.ndarray] = []
+        word_parts: List[np.ndarray] = []
+        ptr = np.zeros(n_programs + 1, dtype=np.int64)
+        for i in range(n_programs):
+            pid = tuple(int(x) for x in pids[i])
+            flat = np.asarray(list(fn(pid, **ctx)), dtype=np.int64)
+            tags, words = geom.flat_to_touch_arrays(flat, op.origin)
+            tags, words = _dedupe_touches(tags, words, geom.sublanes)
+            tag_parts.append(tags)
+            word_parts.append(words)
+            ptr[i + 1] = ptr[i] + tags.shape[0]
+        buf.append_block(
+            site,
+            pids,
+            np.concatenate(tag_parts) if tag_parts else np.empty(0, np.int64),
+            np.concatenate(word_parts) if word_parts else np.empty(0, np.int64),
+            ptr=ptr,
+            group=group,
+        )
+
     stats.records = len(buf)
+    stats.touch_events = buf.n_touch_events
     stats.wall_s = time.perf_counter() - t0
     return buf, stats
 
@@ -252,7 +326,9 @@ def drain_dynamic(
 
     ``index_trace`` has shape (n_programs, k): flat element indices written
     by the instrumented kernel (one row per grid program, row-major grid
-    order); negative entries (or masked-out ones) are padding.
+    order); negative entries (or masked-out ones) are padding.  The whole
+    matrix is converted in one vectorized pass (bulk divmod + per-program
+    ``np.unique`` dedup via lexsort).
     """
     sampler = sampler or GridSampler()
     grid = tuple(int(g) for g in grid)
@@ -261,26 +337,37 @@ def drain_dynamic(
         RegionInfo(operand.name, operand.geometry, space=operand.space)
     )
     geom = operand.geometry
-    rows, cols = geom.shape2d
-    flat_pids = list(sampled_grid(grid, sampler))
-    for pid in flat_pids:
-        lin = int(np.ravel_multi_index(pid, grid)) if grid else 0
-        row = np.asarray(index_trace[lin])
-        if valid_mask is not None:
-            row = row[np.asarray(valid_mask[lin])]
-        row = row[row >= 0]
-        touches = set()
-        for fi in row:
-            r, c = divmod(int(fi), cols) if cols else (0, 0)
-            touches.add((geom.sector_tag(r, c), geom.word_offset(r, c)))
-        buf.append(
-            AccessRecord(
-                array=operand.name,
-                site=f"{kernel_name}/{operand.name}#trace",
-                space=operand.space,
-                kind=operand.kind,
-                program_id=pid,
-                touches=tuple(sorted(touches)),
-            )
-        )
+    pids = sampled_grid_array(grid, sampler)
+    p = int(pids.shape[0])
+    if p == 0:
+        return buf
+    lin = linearize_array(pids, grid)
+    index_trace = np.asarray(index_trace)
+    rows = index_trace[lin].reshape(p, -1)
+    keep = rows >= 0
+    if valid_mask is not None:
+        keep &= np.asarray(valid_mask)[lin].reshape(p, -1).astype(bool)
+    rec = np.broadcast_to(
+        np.arange(p, dtype=np.int64)[:, None], rows.shape
+    )[keep]
+    flat = rows[keep]
+    tags, words = geom.flat_to_touch_arrays(flat)
+    key = tags * geom.sublanes + words
+    rs, ks = unique_pairs(rec, key)
+    counts = np.bincount(rs, minlength=p)
+    ptr = np.zeros(p + 1, dtype=np.int64)
+    np.cumsum(counts, out=ptr[1:])
+    buf.append_block(
+        SiteInfo(
+            operand.name,
+            f"{kernel_name}/{operand.name}#trace",
+            operand.space,
+            operand.kind,
+        ),
+        pids,
+        ks // geom.sublanes,
+        ks % geom.sublanes,
+        ptr=ptr,
+        group=TraceBuffer.new_group(),
+    )
     return buf

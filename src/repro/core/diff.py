@@ -22,6 +22,8 @@ class RegionDelta:
     tx_after: int
     waste_before: float
     waste_after: float
+    sectors_before: int = 0  # touched sectors (array-backed heatmap count)
+    sectors_after: int = 0
 
     @property
     def tx_ratio(self) -> float:
@@ -87,6 +89,8 @@ def diff(before: Heatmap, after: Heatmap,
             if after.region(aname).region.space == "hbm" else 0,
             waste_before=before.waste_ratio(name),
             waste_after=after.waste_ratio(aname),
+            sectors_before=rh.touched_sectors,
+            sectors_after=after.region(aname).touched_sectors,
         ))
     pb = _pattern_set(before)
     pa_raw = _pattern_set(after)

@@ -1,15 +1,22 @@
 """Analyzer: builds the word-sector heat map from trace records.
 
-This is a faithful port of CUTHERMO's Analyzer (§IV-B2):
+This is a faithful port of CUTHERMO's Analyzer (§IV-B2), vectorized:
 
-* ``sector_history_map`` maps a sector tag to a ``words+1``-slot array of
-  *bitmasks of distinct contributor ids*.  Slots ``0..words-1`` are the
-  per-word (sublane-row) masks; the last slot is the whole-sector mask.
-  CUTHERMO uses ``size_t[9]`` because warp ids are < 64; our grid-program
-  ids are unbounded, so the masks are arbitrary-precision Python ints and
-  the update is literally the paper's ``mask |= 1 << id``.
-* ``flush`` popcounts every mask into *temperatures* (distinct-contributor
-  counts) — the heat map proper — organized per region.
+* The seed implementation kept a ``sector_history_map`` of per-word
+  Python-int bitmasks and executed the paper's ``mask |= 1 << id`` once
+  per touch.  The columnar engine reaches the identical temperatures
+  without materializing masks: chunks whose provenance ``group``
+  guarantees pairwise-disjoint program ids (everything the Level-1/2
+  collectors emit) contribute *weighted sums* of distinct-contributor
+  counts, and everything else (record-at-a-time compat appends) takes an
+  exact ``np.unique``-style dedup over packed ``(tag, word, pid)`` keys.
+* ``flush`` produces array-backed ``RegionHeatmap``s: per-region sector
+  tags, an (S, words) word-temperature matrix and an (S,) sector-
+  temperature vector.  ``HeatRow`` objects are materialized lazily for
+  existing row-oriented consumers.
+* ``SectorHistory`` (the paper's bitmask history) is retained for
+  reference/compat use, and ``Analyzer._maps`` reconstructs the full
+  bitmask state on demand so mask-level invariants stay testable.
 
 Invariants (property-tested):
   * sector mask == OR of its word masks (sector temp >= every word temp)
@@ -19,12 +26,19 @@ Invariants (property-tested):
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from .tiles import TileGeometry
-from .trace import AccessRecord, RegionInfo, TraceBuffer, linearize
+from .trace import (
+    AccessRecord,
+    RegionInfo,
+    TraceBuffer,
+    TraceChunk,
+    linearize_array,
+    unique_pairs,
+)
 
 
 @dataclasses.dataclass
@@ -66,21 +80,115 @@ class HeatRow:
         return self.word_temps + (self.sector_temp,)
 
 
-@dataclasses.dataclass(frozen=True)
 class RegionHeatmap:
-    """Flushed heat map of one memory region."""
+    """Flushed heat map of one memory region, array-backed.
 
-    region: RegionInfo
-    rows: Tuple[HeatRow, ...]
-    n_programs: int  # sampled contributor count (temperature upper bound)
+    Canonical storage is three arrays (ascending sector tag):
+
+        tags_array           (S,)        int64 sector tags
+        word_temps_matrix    (S, words)  int64 distinct-contributor counts
+        sector_temps_array   (S,)        int64 whole-sector counts
+
+    ``rows`` materializes the legacy ``HeatRow`` tuple lazily (cached);
+    constructing from ``rows=`` is still supported for the reference
+    path and hand-built fixtures.
+    """
+
+    def __init__(
+        self,
+        region: RegionInfo,
+        rows: Optional[Sequence[HeatRow]] = None,
+        n_programs: int = 0,
+        *,
+        tags: Optional[np.ndarray] = None,
+        word_temps: Optional[np.ndarray] = None,
+        sector_temps: Optional[np.ndarray] = None,
+    ):
+        self.region = region
+        self.n_programs = int(n_programs)
+        if rows is not None:
+            rows = tuple(rows)
+            self._rows: Optional[Tuple[HeatRow, ...]] = rows
+            wps = self.words_per_sector()
+            self._tags = np.asarray([r.tag for r in rows], dtype=np.int64)
+            self._word_temps = np.asarray(
+                [r.word_temps for r in rows], dtype=np.int64
+            ).reshape(len(rows), wps if rows == () else -1)
+            if self._word_temps.size == 0:
+                self._word_temps = self._word_temps.reshape(0, wps)
+            self._sector_temps = np.asarray(
+                [r.sector_temp for r in rows], dtype=np.int64
+            )
+        else:
+            self._rows = None
+            wps = self.words_per_sector()
+            self._tags = (
+                np.empty(0, np.int64) if tags is None else np.asarray(tags)
+            )
+            self._word_temps = (
+                np.empty((0, wps), np.int64)
+                if word_temps is None
+                else np.asarray(word_temps)
+            )
+            self._sector_temps = (
+                np.empty(0, np.int64)
+                if sector_temps is None
+                else np.asarray(sector_temps)
+            )
+
+    # -- array views --------------------------------------------------------
+    @property
+    def tags_array(self) -> np.ndarray:
+        return self._tags
+
+    @property
+    def word_temps_matrix(self) -> np.ndarray:
+        return self._word_temps
+
+    @property
+    def sector_temps_array(self) -> np.ndarray:
+        return self._sector_temps
+
+    # -- legacy row view ----------------------------------------------------
+    @property
+    def rows(self) -> Tuple[HeatRow, ...]:
+        if self._rows is None:
+            name = self.region.name
+            self._rows = tuple(
+                HeatRow(
+                    region=name,
+                    tag=int(t),
+                    word_temps=tuple(int(x) for x in wt),
+                    sector_temp=int(s),
+                )
+                for t, wt, s in zip(
+                    self._tags.tolist(),
+                    self._word_temps.tolist(),
+                    self._sector_temps.tolist(),
+                )
+            )
+        return self._rows
+
+    def row(self, i: int) -> HeatRow:
+        """Materialize a single row (cheap evidence extraction)."""
+        if self._rows is not None:
+            return self._rows[i]
+        return HeatRow(
+            region=self.region.name,
+            tag=int(self._tags[i]),
+            word_temps=tuple(int(x) for x in self._word_temps[i]),
+            sector_temp=int(self._sector_temps[i]),
+        )
 
     @property
     def max_sector_temp(self) -> int:
-        return max((r.sector_temp for r in self.rows), default=0)
+        if self._sector_temps.size == 0:
+            return 0
+        return int(self._sector_temps.max())
 
     @property
     def touched_sectors(self) -> int:
-        return len(self.rows)
+        return int(self._tags.shape[0])
 
     def words_per_sector(self) -> int:
         return self.region.geometry.sublanes
@@ -93,12 +201,19 @@ class RegionHeatmap:
         row0, _ = geom.tag_to_coords(tag)
         return max(1, min(geom.sublanes, rows - row0))
 
+    def valid_words_array(self) -> np.ndarray:
+        """Vectorized ``valid_words`` over every flushed sector tag."""
+        geom = self.region.geometry
+        rows = geom.shape2d[0]
+        row0 = (self._tags // geom.lane_tiles) * geom.sublanes
+        return np.clip(rows - row0, 1, geom.sublanes)
+
     def touched_word_fraction(self) -> float:
         """Fraction of words touched inside touched sectors (waste gauge)."""
-        if not self.rows:
+        if self.touched_sectors == 0:
             return 0.0
-        total = len(self.rows) * self.words_per_sector()
-        touched = sum(1 for r in self.rows for t in r.word_temps if t > 0)
+        total = self.touched_sectors * self.words_per_sector()
+        touched = int((self._word_temps > 0).sum())
         return touched / total
 
 
@@ -140,12 +255,12 @@ class Heatmap:
         excluded (they never cross the HBM boundary).
         """
         regs = self._tx_regions(region)
-        return sum(r.sector_temp for rh in regs for r in rh.rows)
+        return int(sum(int(rh.sector_temps_array.sum()) for rh in regs))
 
     def useful_word_transactions(self, region: Optional[str] = None) -> int:
         """Word-granularity demand: sum of word temps (what software asked)."""
         regs = self._tx_regions(region)
-        return sum(t for rh in regs for r in rh.rows for t in r.word_temps)
+        return int(sum(int(rh.word_temps_matrix.sum()) for rh in regs))
 
     def waste_ratio(self, region: Optional[str] = None) -> float:
         """Moved words / demanded words (>= 1; 1.0 is perfect)."""
@@ -153,55 +268,239 @@ class Heatmap:
         if demanded == 0:
             return 1.0
         regs = self._tx_regions(region)
-        wps = {rh.region.name: rh.words_per_sector() for rh in regs}
         moved = sum(
-            r.sector_temp * wps[r.region] for rh in regs for r in rh.rows
+            int(rh.sector_temps_array.sum()) * rh.words_per_sector()
+            for rh in regs
         )
         return moved / demanded
 
 
+@dataclasses.dataclass
+class _IngestedChunk:
+    chunk: TraceChunk
+    lin: np.ndarray  # (P,) linearized program ids
+
+
 class Analyzer:
-    """Drains a TraceBuffer into sector_history_maps and flushes heat maps."""
+    """Drains TraceBuffers into columnar per-region state and flushes
+    array-backed heat maps (bit-identical to the seed bitmask path)."""
 
     def __init__(self, kernel: str, grid: Sequence[int], sampler_desc: str):
         self.kernel = kernel
         self.grid = tuple(int(g) for g in grid)
         self.sampler_desc = sampler_desc
-        # region name -> {tag -> SectorHistory}
-        self._maps: Dict[str, Dict[int, SectorHistory]] = {}
+        self._chunk_map: Dict[str, List[_IngestedChunk]] = {}
         self._regions: Dict[str, RegionInfo] = {}
-        self._contributors: Dict[str, set] = {}
         self._n_records = 0
         self._dropped = 0
+        # drop/record accounting per source buffer: holding the buffer
+        # object keeps ids stable and makes re-ingesting the same buffer
+        # an incremental drain instead of a double count.
+        self._sources: Dict[
+            int, Tuple[TraceBuffer, int, int, Optional[TraceChunk]]
+        ] = {}
 
     # -- ingestion -----------------------------------------------------------
     def ingest(self, buf: TraceBuffer) -> None:
+        buf._flush_pending()
         for region in buf.regions.values():
             self._regions.setdefault(region.name, region)
-            self._maps.setdefault(region.name, {})
-            self._contributors.setdefault(region.name, set())
-        for rec in buf.records:
-            self._ingest_record(rec)
-        self._dropped += buf.dropped
+            self._chunk_map.setdefault(region.name, [])
+        chunks_seen, dropped_seen = 0, 0
+        src = self._sources.get(id(buf))
+        if src is not None:
+            _, chunks_seen, dropped_seen, last_chunk = src
+            stale = (
+                len(buf.chunks) < chunks_seen
+                or buf.dropped < dropped_seen
+                or (
+                    chunks_seen > 0
+                    and buf.chunks[chunks_seen - 1] is not last_chunk
+                )
+            )
+            if stale:
+                # buffer was clear()ed and refilled: everything is new again
+                chunks_seen, dropped_seen = 0, 0
+        for chunk in buf.chunks[chunks_seen:]:
+            lin = linearize_array(chunk.pids, self.grid)
+            self._chunk_map.setdefault(chunk.site.array, []).append(
+                _IngestedChunk(chunk, lin)
+            )
+            self._n_records += chunk.n_records
+        # drops are surfaced exactly once per buffer, even across repeated
+        # or multi-buffer ingests (the seed double-counted re-ingests)
+        self._dropped += buf.dropped - dropped_seen
+        self._sources[id(buf)] = (
+            buf,
+            len(buf.chunks),
+            buf.dropped,
+            buf.chunks[-1] if buf.chunks else None,
+        )
 
     def _ingest_record(self, rec: AccessRecord) -> None:
-        self._n_records += 1
-        smap = self._maps.setdefault(rec.array, {})
-        region = self._regions.get(rec.array)
-        words = region.geometry.sublanes if region else 8
-        pid = linearize(rec.program_id, self.grid)
-        self._contributors.setdefault(rec.array, set()).add(pid)
-        for tag, woff in rec.touches:
-            hist = smap.get(tag)
-            if hist is None:
-                hist = SectorHistory(words=words)
-                smap[tag] = hist
-            hist.update(woff, pid)
+        """Compat shim: ingest one record (exact path)."""
+        tmp = TraceBuffer()
+        tmp.append(rec)
+        tmp._flush_pending()
+        for chunk in tmp.chunks:
+            lin = linearize_array(chunk.pids, self.grid)
+            self._chunk_map.setdefault(chunk.site.array, []).append(
+                _IngestedChunk(chunk, lin)
+            )
+            self._n_records += chunk.n_records
+
+    # -- compat: reconstruct the paper's bitmask state ------------------------
+    def _words_for(self, name: str) -> int:
+        region = self._regions.get(name)
+        return region.geometry.sublanes if region else 8
+
+    @property
+    def _maps(self) -> Dict[str, Dict[int, SectorHistory]]:
+        """The seed's region -> {tag -> SectorHistory} bitmask state,
+        reconstructed from the columnar chunks (compat/testing only)."""
+        out: Dict[str, Dict[int, SectorHistory]] = {}
+        for name in set(self._regions) | set(self._chunk_map):
+            words = self._words_for(name)
+            smap: Dict[int, SectorHistory] = {}
+            for ich in self._chunk_map.get(name, []):
+                chunk, lin = ich.chunk, ich.lin
+                tags = chunk.tags.tolist()
+                wrds = chunk.words.tolist()
+                if chunk.ptr is None:
+                    pid_list = lin.tolist()
+                    for t, w in zip(tags, wrds):
+                        hist = smap.get(t)
+                        if hist is None:
+                            hist = SectorHistory(words=words)
+                            smap[t] = hist
+                        for pid in pid_list:
+                            hist.update(w, pid)
+                else:
+                    ptr = chunk.ptr.tolist()
+                    for i, pid in enumerate(lin.tolist()):
+                        for j in range(ptr[i], ptr[i + 1]):
+                            t, w = tags[j], wrds[j]
+                            hist = smap.get(t)
+                            if hist is None:
+                                hist = SectorHistory(words=words)
+                                smap[t] = hist
+                            hist.update(w, pid)
+            out[name] = smap
+        return out
 
     # -- flush ----------------------------------------------------------------
+    @staticmethod
+    def _check_words(name: str, chunk: TraceChunk, words: int) -> None:
+        """Guard the packed-key invariant word < words (out-of-range offsets
+        would alias into the next tag's slot)."""
+        wmax = int(chunk.words.max())
+        if wmax >= words:
+            raise IndexError(
+                f"word offset {wmax} out of range for region {name!r} "
+                f"with {words} words/sector"
+            )
+
+    def _flush_region(
+        self, name: str, words: int
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, int]:
+        """(tags, word_temps (S, words), sector_temps, n_programs)."""
+        entries = self._chunk_map.get(name, [])
+        if not entries:
+            return (
+                np.empty(0, np.int64),
+                np.empty((0, words), np.int64),
+                np.empty(0, np.int64),
+                0,
+            )
+        n_programs = int(
+            np.unique(np.concatenate([e.lin for e in entries])).shape[0]
+        )
+        groups = {e.chunk.group for e in entries}
+        fast = len(groups) == 1 and None not in groups
+        if fast:
+            key_parts: List[np.ndarray] = []
+            keyw_parts: List[np.ndarray] = []
+            tag_parts: List[np.ndarray] = []
+            tagw_parts: List[np.ndarray] = []
+            for e in entries:
+                chunk = e.chunk
+                if chunk.tags.size == 0:
+                    continue
+                self._check_words(name, chunk, words)
+                keys = chunk.tags * words + chunk.words
+                if chunk.ptr is None:
+                    w = float(chunk.n_records)
+                    key_parts.append(keys)
+                    keyw_parts.append(np.full(keys.shape, w))
+                    utags = np.unique(chunk.tags)
+                    tag_parts.append(utags)
+                    tagw_parts.append(np.full(utags.shape, w))
+                else:
+                    counts = np.diff(chunk.ptr)
+                    rec = np.repeat(
+                        np.arange(chunk.n_records, dtype=np.int64), counts
+                    )
+                    key_parts.append(keys)
+                    keyw_parts.append(np.ones(keys.shape))
+                    _, rec_tags = unique_pairs(rec, chunk.tags)
+                    tag_parts.append(rec_tags)
+                    tagw_parts.append(np.ones(rec_tags.shape))
+            if not key_parts:
+                return (
+                    np.empty(0, np.int64),
+                    np.empty((0, words), np.int64),
+                    np.empty(0, np.int64),
+                    n_programs,
+                )
+            all_keys = np.concatenate(key_parts)
+            all_kw = np.concatenate(keyw_parts)
+            ukeys, inv = np.unique(all_keys, return_inverse=True)
+            word_counts = np.bincount(inv, weights=all_kw).astype(np.int64)
+            all_tags = np.concatenate(tag_parts)
+            all_tw = np.concatenate(tagw_parts)
+            utags, tinv = np.unique(all_tags, return_inverse=True)
+            sector_counts = np.bincount(tinv, weights=all_tw).astype(np.int64)
+        else:
+            # exact path: expand to (key, pid) events and dedupe
+            ev_keys: List[np.ndarray] = []
+            ev_pids: List[np.ndarray] = []
+            for e in entries:
+                chunk = e.chunk
+                if chunk.tags.size == 0:
+                    continue
+                self._check_words(name, chunk, words)
+                keys = chunk.tags * words + chunk.words
+                if chunk.ptr is None:
+                    ev_keys.append(np.tile(keys, chunk.n_records))
+                    ev_pids.append(np.repeat(e.lin, keys.shape[0]))
+                else:
+                    ev_keys.append(keys)
+                    ev_pids.append(np.repeat(e.lin, np.diff(chunk.ptr)))
+            if not ev_keys:
+                return (
+                    np.empty(0, np.int64),
+                    np.empty((0, words), np.int64),
+                    np.empty(0, np.int64),
+                    n_programs,
+                )
+            keys = np.concatenate(ev_keys)
+            pids = np.concatenate(ev_pids)
+            # distinct (tag, word, pid) triples, then distinct (tag, pid)
+            ks, ps = unique_pairs(keys, pids)
+            ukeys, word_counts = np.unique(ks, return_counts=True)
+            dtags, _ = unique_pairs(ks // words, ps)
+            utags, sector_counts = np.unique(dtags, return_counts=True)
+        # scatter packed word keys into the (S, words) matrix
+        key_tags = ukeys // words
+        key_words = ukeys % words
+        word_temps = np.zeros((utags.shape[0], words), dtype=np.int64)
+        rows_idx = np.searchsorted(utags, key_tags)
+        word_temps[rows_idx, key_words] = word_counts
+        return utags, word_temps, sector_counts.astype(np.int64), n_programs
+
     def flush(self) -> Heatmap:
         region_maps: List[RegionHeatmap] = []
-        for name, smap in sorted(self._maps.items()):
+        for name in sorted(set(self._regions) | set(self._chunk_map)):
             region = self._regions.get(name)
             if region is None:
                 # unregistered region: synthesize a geometry stub
@@ -209,20 +508,17 @@ class Analyzer:
                     name=name,
                     geometry=TileGeometry(shape=(8, 128), itemsize=4, name=name),
                 )
-            rows = tuple(
-                HeatRow(
-                    region=name,
-                    tag=tag,
-                    word_temps=tuple(h.word_temps()),
-                    sector_temp=h.sector_temp(),
-                )
-                for tag, h in sorted(smap.items())
+            words = region.geometry.sublanes
+            tags, word_temps, sector_temps, n_programs = self._flush_region(
+                name, words
             )
             region_maps.append(
                 RegionHeatmap(
                     region=region,
-                    rows=rows,
-                    n_programs=len(self._contributors.get(name, ())),
+                    n_programs=n_programs,
+                    tags=tags,
+                    word_temps=word_temps,
+                    sector_temps=sector_temps,
                 )
             )
         return Heatmap(
@@ -256,3 +552,25 @@ def compress_rows(
         else:
             out.append((row, 1))
     return out
+
+
+def compress_region(rh: RegionHeatmap) -> List[Tuple[HeatRow, int]]:
+    """Vectorized ``compress_rows`` over an array-backed region: find runs
+    of consecutive tags with identical temperature signatures without
+    materializing every HeatRow (only run representatives are built)."""
+    s = rh.touched_sectors
+    if s == 0:
+        return []
+    tags = rh.tags_array
+    wt = rh.word_temps_matrix
+    st = rh.sector_temps_array
+    same = (
+        (tags[1:] == tags[:-1] + 1)
+        & (st[1:] == st[:-1])
+        & np.all(wt[1:] == wt[:-1], axis=1)
+    )
+    starts = np.flatnonzero(np.concatenate(([True], ~same)))
+    counts = np.diff(np.concatenate((starts, [s])))
+    return [
+        (rh.row(int(i)), int(c)) for i, c in zip(starts, counts)
+    ]

@@ -15,6 +15,11 @@ qualitative definitions (§IV-C):
                   origins are not tile-aligned -> extra transfer per row
   STRIDED         the same word offset touched across many sectors while
                   other words stay cold -> 1/words of each transfer useful
+
+Detectors run on the Analyzer's array-backed regions: row classification
+is a handful of boolean masks over the (S, words) temperature matrix,
+and ``HeatRow`` objects are only materialized for the <=8 evidence rows
+each report carries.
 """
 
 from __future__ import annotations
@@ -22,6 +27,8 @@ from __future__ import annotations
 import dataclasses
 import statistics
 from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 from .heatmap import Heatmap, HeatRow, RegionHeatmap
 
@@ -56,6 +63,11 @@ def _mean(xs: Sequence[float]) -> float:
     return sum(xs) / len(xs) if xs else 0.0
 
 
+def _rows_of(rh: RegionHeatmap, mask: np.ndarray, limit: int = 8) -> Tuple[HeatRow, ...]:
+    """Materialize the first ``limit`` evidence rows selected by ``mask``."""
+    return tuple(rh.row(int(i)) for i in np.flatnonzero(mask)[:limit])
+
+
 # --------------------------------------------------------------------------
 # individual detectors
 # --------------------------------------------------------------------------
@@ -64,59 +76,63 @@ def detect_hot(
     rh: RegionHeatmap, kernel: str, min_temp: int = 4
 ) -> Optional[PatternReport]:
     """Hot / random-hot sectors: heavily shared data (Fig. 6 e/f)."""
-    if rh.region.space != "hbm" or not rh.rows:
+    if rh.region.space != "hbm" or rh.touched_sectors == 0:
         return None
-    hot_rows = [r for r in rh.rows if r.sector_temp >= min_temp]
-    if not hot_rows:
+    wt = rh.word_temps_matrix
+    st = rh.sector_temps_array
+    n_rows = rh.touched_sectors
+    wps = wt.shape[1]
+    hot = st >= min_temp
+    if not hot.any():
         return None
+    touched_cnt = (wt > 0).sum(axis=1)
+    pos_min = np.where(wt > 0, wt, np.iinfo(np.int64).max).min(axis=1)
     # "hot": word temps close to sector temp (everything shared by everyone)
-    uniform, random_ = [], []
-    for r in hot_rows:
-        touched = [t for t in r.word_temps if t > 0]
-        if not touched:
-            continue
-        if min(touched) >= 0.5 * r.sector_temp and len(touched) >= len(r.word_temps) // 2:
-            uniform.append(r)
-        else:
-            random_.append(r)
+    uniform = (
+        hot
+        & (touched_cnt > 0)
+        & (2 * pos_min >= st)
+        & (touched_cnt >= wps // 2)
+    )
+    random_ = hot & (touched_cnt > 0) & ~uniform
     # Strided regions also have high sector temps but only one warm word;
     # hot requires multiple warm words per sector (handled by the split
     # above: single-word rows land in random_ with low evidence).
-    if len(uniform) >= max(1, len(rh.rows) // 16):
-        frac = len(uniform) / len(rh.rows)
-        temp = _mean([r.sector_temp for r in uniform])
+    n_uniform = int(uniform.sum())
+    if n_uniform >= max(1, n_rows // 16):
+        frac = n_uniform / n_rows
+        temp = _mean(st[uniform].tolist())
         return PatternReport(
             pattern=HOT,
             region=rh.region.name,
             kernel=kernel,
             severity=min(1.0, frac * temp / max(1, rh.n_programs)),
             evidence=(
-                f"{len(uniform)}/{len(rh.rows)} sectors have sector temp >= {min_temp} "
+                f"{n_uniform}/{n_rows} sectors have sector temp >= {min_temp} "
                 f"with uniformly warm words (mean sector temp {temp:.1f}, "
                 f"{rh.n_programs} sampled programs)",
                 "shared across many grid programs -> keep resident in VMEM "
                 "(reorder grid / dimension_semantics) instead of re-fetching",
             ),
-            rows=tuple(uniform[:8]),
+            rows=_rows_of(rh, uniform),
             details=(("mean_temp", temp), ("fraction", frac)),
         )
-    if len(random_) >= max(1, len(rh.rows) // 8):
-        multiword = [
-            r for r in random_ if sum(1 for t in r.word_temps if t > 0) >= 2
-        ]
-        if not multiword:
+    if int(random_.sum()) >= max(1, n_rows // 8):
+        multiword = random_ & (touched_cnt >= 2)
+        n_multi = int(multiword.sum())
+        if not n_multi:
             return None
-        temp = _mean([r.sector_temp for r in multiword])
+        temp = _mean(st[multiword].tolist())
         return PatternReport(
             pattern=HOT_RANDOM,
             region=rh.region.name,
             kernel=kernel,
-            severity=min(1.0, 0.5 * len(multiword) / len(rh.rows)),
+            severity=min(1.0, 0.5 * n_multi / n_rows),
             evidence=(
-                f"{len(multiword)}/{len(rh.rows)} sectors irregularly hot "
+                f"{n_multi}/{n_rows} sectors irregularly hot "
                 f"(mean sector temp {temp:.1f}); data-dependent sharing",
             ),
-            rows=tuple(multiword[:8]),
+            rows=_rows_of(rh, multiword),
             details=(("mean_temp", temp),),
         )
     return None
@@ -126,16 +142,14 @@ def detect_scratch_abuse(
     rh: RegionHeatmap, kernel: str
 ) -> Optional[PatternReport]:
     """SMEM-abuse analogue: scratch holding program-local data (Fig. 6 a)."""
-    if rh.region.space != "vmem_scratch" or not rh.rows:
+    if rh.region.space != "vmem_scratch" or rh.touched_sectors == 0:
         return None
+    wt = rh.word_temps_matrix
     # program-local: NO word is shared by two programs (sector temp may
     # exceed 1 when distinct programs own distinct words — still local)
-    local_rows = [
-        r
-        for r in rh.rows
-        if all(t <= 1 for t in r.word_temps) and any(t == 1 for t in r.word_temps)
-    ]
-    frac = len(local_rows) / len(rh.rows)
+    local = (wt <= 1).all(axis=1) & (wt == 1).any(axis=1)
+    n_local = int(local.sum())
+    frac = n_local / rh.touched_sectors
     if frac < 0.75:
         return None
     return PatternReport(
@@ -144,14 +158,14 @@ def detect_scratch_abuse(
         kernel=kernel,
         severity=frac,
         evidence=(
-            f"{len(local_rows)}/{len(rh.rows)} scratch sectors are touched by "
+            f"{n_local}/{rh.touched_sectors} scratch sectors are touched by "
             "exactly one grid program per word: the data is program-local",
             "scratch (SMEM analogue) buys nothing here and costs VMEM that "
             "the pipeline could use for deeper double-buffering -> keep the "
             "value in a VREG accumulator (fuse the reduction) and drop the "
             "scratch allocation",
         ),
-        rows=tuple(local_rows[:8]),
+        rows=_rows_of(rh, local),
         details=(("local_fraction", frac),),
     )
 
@@ -160,18 +174,19 @@ def detect_false_sharing(
     rh: RegionHeatmap, kernel: str, ratio: float = 3.0
 ) -> Optional[PatternReport]:
     """Sector temp >> word temps: each program owns a different word (Fig. 6 b)."""
-    if rh.region.space != "hbm" or not rh.rows:
+    if rh.region.space != "hbm" or rh.touched_sectors == 0:
         return None
-    fs_rows: List[HeatRow] = []
-    for r in rh.rows:
-        max_word = max(r.word_temps) if r.word_temps else 0
-        touched = sum(1 for t in r.word_temps if t > 0)
-        if max_word >= 1 and touched >= 2 and r.sector_temp >= ratio * max_word:
-            fs_rows.append(r)
-    if len(fs_rows) < max(2, len(rh.rows) // 8):
+    wt = rh.word_temps_matrix
+    st = rh.sector_temps_array
+    n_rows = rh.touched_sectors
+    max_word = wt.max(axis=1) if wt.shape[1] else np.zeros(n_rows, np.int64)
+    touched_cnt = (wt > 0).sum(axis=1)
+    fs = (max_word >= 1) & (touched_cnt >= 2) & (st >= ratio * max_word)
+    n_fs = int(fs.sum())
+    if n_fs < max(2, n_rows // 8):
         return None
     mean_ratio = _mean(
-        [r.sector_temp / max(1, max(r.word_temps)) for r in fs_rows]
+        (st[fs] / np.maximum(1, max_word[fs])).tolist()
     )
     wps = rh.words_per_sector()
     return PatternReport(
@@ -180,34 +195,36 @@ def detect_false_sharing(
         kernel=kernel,
         severity=min(1.0, (mean_ratio - 1) / (wps - 1)) if wps > 1 else 1.0,
         evidence=(
-            f"{len(fs_rows)}/{len(rh.rows)} sectors: sector temp is "
+            f"{n_fs}/{n_rows} sectors: sector temp is "
             f"{mean_ratio:.1f}x the hottest word -> ~{mean_ratio:.0f} tile "
             "transfers where 1 would do",
             "distinct grid programs own distinct sublanes of the same tile "
             "-> swap grid axes / re-tile so one program covers whole tiles",
         ),
-        rows=tuple(fs_rows[:8]),
-        details=(("mean_ratio", mean_ratio), ("n_rows", float(len(fs_rows)))),
+        rows=_rows_of(rh, fs),
+        details=(("mean_ratio", mean_ratio), ("n_rows", float(n_fs))),
     )
 
 
-def _head_tail_overlap(r: HeatRow) -> Optional[int]:
-    """If a strict head (or tail) run of words is exactly one contributor
-    hotter than the rest — the signature of every block straddling one tile
-    boundary — return the run length, else None."""
-    temps = r.word_temps
-    wps = len(temps)
-    if wps < 2 or min(temps) == 0:
-        return None
-    lo = min(temps)
-    hi = max(temps)
-    if hi != lo + 1 or r.sector_temp != hi:
-        return None
-    hot_idx = [i for i, t in enumerate(temps) if t == hi]
-    k = len(hot_idx)
-    if 0 < k < wps and (hot_idx == list(range(k)) or hot_idx == list(range(wps - k, wps))):
-        return k
-    return None
+def _head_tail_overlap_mask(
+    wt: np.ndarray, st: np.ndarray
+) -> np.ndarray:
+    """Rows where a strict head (or tail) run of words is exactly one
+    contributor hotter than the rest — the signature of every block
+    straddling one tile boundary."""
+    n_rows, wps = wt.shape
+    if wps < 2:
+        return np.zeros(n_rows, bool)
+    lo = wt.min(axis=1)
+    hi = wt.max(axis=1)
+    cand = (lo > 0) & (hi == lo + 1) & (st == hi)
+    hot = wt == hi[:, None]
+    # hot run is a strict prefix iff hot is monotone non-increasing along
+    # the row; a strict tail iff monotone non-decreasing (k in (0, wps) is
+    # implied by lo < hi under cand)
+    prefix = np.all(hot[:, 1:] <= hot[:, :-1], axis=1)
+    suffix = np.all(hot[:, 1:] >= hot[:, :-1], axis=1)
+    return cand & (prefix | suffix)
 
 
 def detect_misalignment(
@@ -223,33 +240,34 @@ def detect_misalignment(
          cold, or sector temp above all words) adjacent to fully-covered
          interior sectors — the classic 5-transfers-where-4-would-do.
     """
-    if rh.region.space != "hbm" or len(rh.rows) < 3:
+    if rh.region.space != "hbm" or rh.touched_sectors < 3:
         return None
+    wt = rh.word_temps_matrix
+    st = rh.sector_temps_array
+    n_rows = rh.touched_sectors
     wps = rh.words_per_sector()
-    overlap_rows: List[HeatRow] = []
-    boundary: List[HeatRow] = []
-    interior: List[HeatRow] = []
-    for r in rh.rows:
-        touched = [t for t in r.word_temps if t > 0]
-        valid = rh.valid_words(r.tag)
-        if not touched:
-            continue
-        if _head_tail_overlap(r) is not None:
-            overlap_rows.append(r)
-        elif len(touched) >= valid and max(r.word_temps) == r.sector_temp:
-            interior.append(r)
-        elif r.sector_temp > max(r.word_temps):
-            boundary.append(r)
-        elif len(touched) < valid and r.sector_temp == max(r.word_temps):
-            boundary.append(r)  # edge sector with unused head/tail words
-        else:
-            interior.append(r)
+    touched_cnt = (wt > 0).sum(axis=1)
+    max_word = wt.max(axis=1)
+    valid = rh.valid_words_array()
+    nonempty = touched_cnt > 0
+    overlap = _head_tail_overlap_mask(wt, st) & nonempty
+    full_cover = nonempty & ~overlap & (touched_cnt >= valid) & (max_word == st)
+    above = nonempty & ~overlap & ~full_cover & (st > max_word)
+    partial = (
+        nonempty & ~overlap & ~full_cover & ~above
+        & (touched_cnt < valid) & (st == max_word)
+    )
+    boundary = above | partial
+    # everything nonempty that is neither overlap nor boundary (the seed's
+    # first interior branch plus its trailing else)
+    interior = nonempty & ~overlap & ~boundary
 
     # Signature A: majority of sectors show the same-k overlap.
-    frac_a = len(overlap_rows) / len(rh.rows)
+    n_overlap = int(overlap.sum())
+    frac_a = n_overlap / n_rows
     if frac_a >= 0.5:
-        actual_tx = sum(r.sector_temp for r in overlap_rows)
-        ideal_tx = sum(sum(r.word_temps) for r in overlap_rows) / wps
+        actual_tx = int(st[overlap].sum())
+        ideal_tx = int(wt[overlap].sum()) / wps
         overhead = max(0.0, actual_tx / max(ideal_tx, 1e-9) - 1.0)
         return PatternReport(
             pattern=MISALIGNMENT,
@@ -257,74 +275,72 @@ def detect_misalignment(
             kernel=kernel,
             severity=min(1.0, overhead),
             evidence=(
-                f"{len(overlap_rows)}/{len(rh.rows)} sectors show a head/tail "
+                f"{n_overlap}/{n_rows} sectors show a head/tail "
                 "word run one contributor hotter than the rest: every block "
                 "origin straddles a tile boundary by the same offset",
                 f"~{100*overhead:.0f}% extra tile transfers -> pad the array "
                 "(or shift the block origin) to the (sublane,128) tile, or "
                 "duplicate boundary words (paper's zigzag fix)",
             ),
-            rows=tuple(overlap_rows[:8]),
+            rows=_rows_of(rh, overlap),
             details=(("overhead", overhead), ("boundary_fraction", frac_a)),
         )
 
     # Signature C: EVERY interior block straddles a boundary — all words
     # covered, uniform word temps, sector temp exactly 2x (two programs
     # split each tile head/tail), with partially-covered run-edge tiles.
-    two_way = [
-        r
-        for r in rh.rows
-        if r.word_temps
-        and len({t for t in r.word_temps if t > 0}) == 1
-        and sum(1 for t in r.word_temps if t > 0) >= rh.valid_words(r.tag)
-        and r.sector_temp == 2 * max(r.word_temps)
-    ]
-    edge_partial = [
-        r
-        for r in rh.rows
-        if 0 < sum(1 for t in r.word_temps if t > 0) < rh.valid_words(r.tag)
-    ]
-    if edge_partial and len(two_way) >= 0.5 * len(rh.rows):
+    pos_min = np.where(wt > 0, wt, np.iinfo(np.int64).max).min(axis=1)
+    two_way = (
+        nonempty
+        & (pos_min == max_word)
+        & (touched_cnt >= valid)
+        & (st == 2 * max_word)
+    )
+    edge_partial = (touched_cnt > 0) & (touched_cnt < valid)
+    n_two_way = int(two_way.sum())
+    if edge_partial.any() and n_two_way >= 0.5 * n_rows:
         overhead = 1.0  # ~2x transfers on the straddled tiles
         return PatternReport(
             pattern=MISALIGNMENT,
             region=rh.region.name,
             kernel=kernel,
-            severity=min(1.0, len(two_way) / len(rh.rows)),
+            severity=min(1.0, n_two_way / n_rows),
             evidence=(
-                f"{len(two_way)}/{len(rh.rows)} sectors are split between "
+                f"{n_two_way}/{n_rows} sectors are split between "
                 "exactly two programs (uniform words, sector temp 2x) with "
-                f"{len(edge_partial)} half-covered run-edge tiles: every "
+                f"{int(edge_partial.sum())} half-covered run-edge tiles: every "
                 "block origin straddles a tile boundary",
                 "pad the array or shift the block origin to the "
                 "(sublane,128) tile; or duplicate boundary words (zigzag)",
             ),
-            rows=tuple(two_way[:8]),
+            rows=_rows_of(rh, two_way),
             details=(("overhead", overhead),
-                     ("boundary_fraction", len(two_way) / len(rh.rows))),
+                     ("boundary_fraction", n_two_way / n_rows)),
         )
 
     # Signature B: minority boundary sectors between fully-used interiors.
-    if not boundary or not interior:
+    n_boundary = int(boundary.sum())
+    n_interior = int(interior.sum())
+    if not n_boundary or not n_interior:
         return None
-    frac = len(boundary) / len(rh.rows)
+    frac = n_boundary / n_rows
     if frac < 0.02 or frac > 0.6:
         return None
-    overhead = len(boundary) / max(1, len(interior))
+    overhead = n_boundary / max(1, n_interior)
     return PatternReport(
         pattern=MISALIGNMENT,
         region=rh.region.name,
         kernel=kernel,
         severity=min(1.0, overhead),
         evidence=(
-            f"{len(boundary)} boundary sectors are split/partially used next "
-            f"to {len(interior)} fully-used interior sectors: block origins "
+            f"{n_boundary} boundary sectors are split/partially used next "
+            f"to {n_interior} fully-used interior sectors: block origins "
             "are not tile-aligned",
             f"~{100*overhead:.0f}% extra tile transfers + wasted VMEM words "
             "-> pad the array (or shift block origin) to the (sublane,128) "
             "tile, or duplicate boundary elements (paper's zigzag fix)",
         ),
-        rows=tuple(boundary[:8]),
+        rows=_rows_of(rh, boundary),
         details=(("overhead", overhead), ("boundary_fraction", frac)),
     )
 
@@ -333,24 +349,29 @@ def detect_strided(
     rh: RegionHeatmap, kernel: str
 ) -> Optional[PatternReport]:
     """Same word offset warm across many sectors, others cold (Fig. 6 d)."""
-    if rh.region.space != "hbm" or len(rh.rows) < 4:
+    if rh.region.space != "hbm" or rh.touched_sectors < 4:
         return None
     wps = rh.words_per_sector()
     if wps < 2:
         return None
-    sparse_rows = []
-    offsets: List[int] = []
-    for r in rh.rows:
-        valid = rh.valid_words(r.tag)
-        if valid < 2:
-            continue  # edge tiles with one real word can't be "sparse"
-        touched_idx = [i for i, t in enumerate(r.word_temps) if t > 0]
-        if 0 < len(touched_idx) <= max(1, valid // 4):
-            sparse_rows.append(r)
-            offsets.extend(touched_idx)
+    wt = rh.word_temps_matrix
+    n_rows = rh.touched_sectors
+    valid = rh.valid_words_array()
+    touched_cnt = (wt > 0).sum(axis=1)
+    # edge tiles with one real word can't be "sparse"
+    sparse = (
+        (valid >= 2)
+        & (touched_cnt > 0)
+        & (touched_cnt <= np.maximum(1, valid // 4))
+    )
+    if not sparse.any():
+        return None
+    # word offsets of every touch in sparse rows, row-major order
+    offsets = np.nonzero(wt[sparse] > 0)[1].tolist()
     if not offsets:
         return None
-    frac = len(sparse_rows) / len(rh.rows)
+    n_sparse = int(sparse.sum())
+    frac = n_sparse / n_rows
     if frac < 0.6:
         return None
     # offsets should be concentrated (same word position across sectors)
@@ -359,10 +380,8 @@ def detect_strided(
     except statistics.StatisticsError:
         mode_off = offsets[0]
     concentration = offsets.count(mode_off) / len(offsets)
-    waste = 1.0 - _mean(
-        [sum(1 for t in r.word_temps if t > 0) / wps for r in sparse_rows]
-    )
-    tags = [r.tag for r in sparse_rows]
+    waste = 1.0 - _mean((touched_cnt[sparse] / wps).tolist())
+    tags = rh.tags_array[sparse].tolist()
     stride = statistics.mode([b - a for a, b in zip(tags, tags[1:])]) if len(tags) > 1 else 1
     return PatternReport(
         pattern=STRIDED,
@@ -370,14 +389,14 @@ def detect_strided(
         kernel=kernel,
         severity=min(1.0, waste),
         evidence=(
-            f"{len(sparse_rows)}/{len(rh.rows)} sectors have <= {wps//4} of "
+            f"{n_sparse}/{n_rows} sectors have <= {wps//4} of "
             f"{wps} words touched; word offset {mode_off} recurs in "
             f"{100*concentration:.0f}% of touches, sector stride {stride}",
             f"{100*waste:.0f}% of every transferred tile is dead -> transpose "
             "the layout so the strided axis becomes the minor (lane) dim, or "
             "gather the column once into VMEM scratch and reuse",
         ),
-        rows=tuple(sparse_rows[:8]),
+        rows=_rows_of(rh, sparse),
         details=(
             ("waste", waste),
             ("stride", float(stride)),

@@ -12,7 +12,7 @@ import html as _html
 import io
 from typing import List, Optional, Sequence, Tuple
 
-from .heatmap import Heatmap, HeatRow, RegionHeatmap, compress_rows
+from .heatmap import Heatmap, HeatRow, RegionHeatmap, compress_region, compress_rows
 
 # ANSI 256-color heat ramp (cold -> hot)
 _RAMP = [17, 19, 26, 32, 37, 71, 106, 142, 178, 208, 202, 196]
@@ -37,7 +37,7 @@ def render_csv(hm: Heatmap, compress: bool = True) -> str:
         )
         out.write(header + "\n")
         rows: Sequence[Tuple[HeatRow, int]]
-        rows = compress_rows(rh.rows) if compress else [(r, 1) for r in rh.rows]
+        rows = compress_region(rh) if compress else [(r, 1) for r in rh.rows]
         for row, rep in rows:
             out.write(
                 ",".join(
@@ -75,7 +75,7 @@ def render_ascii(
         header = " " * 28 + " ".join(f"w{i:<2}" for i in range(wps)) + " | sect"
         out.write(header + "\n")
         shown = 0
-        for row, rep in compress_rows(rh.rows):
+        for row, rep in compress_region(rh):
             if shown >= max_rows_per_region:
                 out.write(f"  ... ({rh.touched_sectors - shown} more sectors)\n")
                 break
@@ -122,7 +122,7 @@ def render_html(hm: Heatmap) -> str:
             + "".join(f"<th>w{i}</th>" for i in range(wps))
             + "<th>sector&deg;</th></tr>"
         )
-        for row, rep in compress_rows(rh.rows):
+        for row, rep in compress_region(rh):
             cells = []
             for t in row.word_temps + (row.sector_temp,):
                 frac = min(1.0, t / max_temp) if t > 0 else 0.0

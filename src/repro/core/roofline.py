@@ -138,6 +138,39 @@ def from_compiled(
     )
 
 
+def from_heatmap(
+    name: str,
+    hm,
+    chips: int = 1,
+    flops: float = 0.0,
+    model_flops: float = 0.0,
+    collective_bytes: float = 0.0,
+) -> RooflineTerms:
+    """Build terms from a kernel heat map's modeled transaction counts.
+
+    The memory term comes straight from the array-backed heat map: every
+    modeled sector transaction moves one native tile (``sector_bytes``)
+    across the HBM<->VMEM boundary, so the heat map's per-region sector
+    temperatures ARE the byte-traffic model — the bridge between the
+    Level-1 profiler and the Level-3 roofline view.
+    """
+    hlo_bytes = 0.0
+    for rh in hm.regions:
+        if rh.region.space != "hbm":
+            continue
+        hlo_bytes += float(
+            int(rh.sector_temps_array.sum()) * rh.region.geometry.sector_bytes
+        )
+    return RooflineTerms(
+        name=name,
+        chips=chips,
+        hlo_flops=flops,
+        hlo_bytes=hlo_bytes,
+        collective_bytes=collective_bytes,
+        model_flops=model_flops,
+    )
+
+
 def from_raw(
     name: str,
     chips: int,

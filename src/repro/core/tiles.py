@@ -117,6 +117,34 @@ class TileGeometry:
         st, lt = divmod(tag, self.lane_tiles)
         return st * self.sublanes, lt * LANES
 
+    def slice_to_touch_arrays(
+        self,
+        row_start: int,
+        row_stop: int,
+        col_start: int,
+        col_stop: int,
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Vectorized ``slice_to_touches``: (tags, words) int64 arrays.
+
+        Row-major order (row outer, lane tile inner), identical to the
+        generator version; each (tag, word) pair appears exactly once.
+        """
+        rows, cols = self.shape2d
+        row_start = max(0, row_start)
+        col_start = max(0, col_start)
+        row_stop = min(rows, row_stop)
+        col_stop = min(cols, col_stop)
+        if row_stop <= row_start or col_stop <= col_start:
+            z = np.empty(0, dtype=np.int64)
+            return z, z
+        lt0 = col_start // LANES
+        lt1 = (col_stop - 1) // LANES
+        r = np.arange(row_start, row_stop, dtype=np.int64)
+        lt = np.arange(lt0, lt1 + 1, dtype=np.int64)
+        tags = ((r // self.sublanes) * self.lane_tiles)[:, None] + lt[None, :]
+        words = np.broadcast_to((r % self.sublanes)[:, None], tags.shape)
+        return tags.reshape(-1), words.reshape(-1).copy()
+
     def slice_to_touches(
         self,
         row_start: int,
@@ -131,31 +159,43 @@ class TileGeometry:
         touches the whole (1,128) word, exactly as touching any byte of a
         GPU word touches the word.
         """
-        rows, cols = self.shape2d
-        row_start = max(0, row_start)
-        col_start = max(0, col_start)
-        row_stop = min(rows, row_stop)
-        col_stop = min(cols, col_stop)
-        if row_stop <= row_start or col_stop <= col_start:
-            return
-        lt0 = col_start // LANES
-        lt1 = (col_stop - 1) // LANES
-        for r in range(row_start, row_stop):
-            st = r // self.sublanes
-            w = r % self.sublanes
-            base = st * self.lane_tiles
-            for lt in range(lt0, lt1 + 1):
-                yield (base + lt, w)
+        tags, words = self.slice_to_touch_arrays(
+            row_start, row_stop, col_start, col_stop
+        )
+        for t, w in zip(tags.tolist(), words.tolist()):
+            yield (t, w)
 
-    def run_to_touches(self, start: int, stop: int) -> Iterable[Tuple[int, int]]:
-        """(sector_tag, word) pairs touched by a contiguous 1-D element run."""
+    def run_to_touch_arrays(
+        self, start: int, stop: int
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Vectorized ``run_to_touches``: (tags, words) int64 arrays."""
         n = self.shape[0] if len(self.shape) == 1 else int(np.prod(self.shape))
         start = max(0, start)
         stop = min(n, stop)
         if stop <= start:
-            return
-        for row in range(start // LANES, (stop - 1) // LANES + 1):
-            yield (self.sector_tag(row, 0), row % self.sublanes)
+            z = np.empty(0, dtype=np.int64)
+            return z, z
+        row = np.arange(start // LANES, (stop - 1) // LANES + 1, dtype=np.int64)
+        tags = (row // self.sublanes) * self.lane_tiles
+        return tags, row % self.sublanes
+
+    def run_to_touches(self, start: int, stop: int) -> Iterable[Tuple[int, int]]:
+        """(sector_tag, word) pairs touched by a contiguous 1-D element run."""
+        tags, words = self.run_to_touch_arrays(start, stop)
+        for t, w in zip(tags.tolist(), words.tolist()):
+            yield (t, w)
+
+    def flat_to_touch_arrays(
+        self, flat: np.ndarray, origin: Tuple[int, int] = (0, 0)
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Vectorized flat-element-index -> (tags, words), with an origin
+        shift (the Level-2 / dynamic-gather address path)."""
+        flat = np.asarray(flat, dtype=np.int64).reshape(-1)
+        _, cols = self.shape2d
+        r = flat // cols + origin[0]
+        c = flat % cols + origin[1]
+        tags = (r // self.sublanes) * self.lane_tiles + c // LANES
+        return tags, r % self.sublanes
 
     def is_aligned_slice(
         self, row_start: int, row_stop: int, col_start: int, col_stop: int

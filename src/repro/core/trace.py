@@ -19,12 +19,42 @@ Block-sampling (CUTHERMO §IV-B): tracing every grid program of a big
 kernel is overwhelming and aliases ids; we sample a *window* of the grid
 (default: leading grid coordinate == 0), the analogue of tracing one
 thread block.  Kernel whitelisting is supported the same way.
+
+Columnar buffer layout
+----------------------
+``TraceBuffer`` no longer stores one Python object per record.  Records
+are packed into ``TraceChunk`` structured-array chunks, appended in
+bulk by the collector:
+
+    site    one ``SiteInfo`` (array, site, space, kind) per chunk
+    pids    (P, ndim) int64 — grid coordinates of the P records
+    tags    (T,) int64 — sector tags of the chunk's touches
+    words   (T,) int64 — word (sublane-row) offsets, parallel to ``tags``
+    ptr     (P+1,) int64 CSR offsets into tags/words (record i touches
+            ``tags[ptr[i]:ptr[i+1]]``), or ``None`` for a *broadcast*
+            chunk in which every one of the P records touches all T
+            touches (the common Level-1 case: many grid programs mapping
+            to the same BlockSpec block share one touch set)
+    group   provenance token.  All chunks of one (collect call, site)
+            share a token, which guarantees (a) record pids are pairwise
+            disjoint across the token's chunks and (b) touches are
+            unique within each record.  The Analyzer exploits this to
+            count distinct contributors with weighted sums instead of
+            per-bit set union; chunks without a token (compat appends)
+            take the exact dedup path.
+
+A broadcast chunk stores P + 2T integers for P x T logical touch events
+— the representation that lets a full-grid GEMM trace fit in memory and
+flush in milliseconds.  ``TraceBuffer.records`` remains available as a
+lazy record view (it materializes ``AccessRecord`` objects on demand)
+for backward compatibility.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Iterable, List, Optional, Sequence, Tuple
+import itertools
+from typing import Callable, Iterable, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -43,6 +73,58 @@ class AccessRecord:
     kind: str  # 'load' | 'store' | 'accum'
     program_id: ProgramId
     touches: Tuple[Tuple[int, int], ...]  # (sector_tag, word_offset)
+
+
+@dataclasses.dataclass(frozen=True)
+class SiteInfo:
+    """Per-chunk record metadata (everything but pid and touches)."""
+
+    array: str
+    site: str
+    space: str
+    kind: str
+
+
+@dataclasses.dataclass
+class TraceChunk:
+    """One columnar run of records sharing a SiteInfo (see module doc)."""
+
+    site: SiteInfo
+    pids: np.ndarray  # (P, ndim) int64
+    tags: np.ndarray  # (T,) int64
+    words: np.ndarray  # (T,) int64
+    ptr: Optional[np.ndarray] = None  # (P+1,) int64 CSR; None = broadcast
+    group: Optional[int] = None  # disjointness token; None = compat/exact
+
+    @property
+    def n_records(self) -> int:
+        return int(self.pids.shape[0])
+
+    @property
+    def n_touch_events(self) -> int:
+        """Logical (record, touch) event count this chunk represents."""
+        if self.ptr is None:
+            return self.n_records * int(self.tags.shape[0])
+        return int(self.tags.shape[0])
+
+    def record_touches(self, i: int) -> Tuple[Tuple[int, int], ...]:
+        if self.ptr is None:
+            t0, t1 = 0, self.tags.shape[0]
+        else:
+            t0, t1 = int(self.ptr[i]), int(self.ptr[i + 1])
+        return tuple(
+            zip(self.tags[t0:t1].tolist(), self.words[t0:t1].tolist())
+        )
+
+    def record(self, i: int) -> AccessRecord:
+        return AccessRecord(
+            array=self.site.array,
+            site=self.site.site,
+            space=self.site.space,
+            kind=self.site.kind,
+            program_id=tuple(int(x) for x in self.pids[i]),
+            touches=self.record_touches(i),
+        )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -99,39 +181,227 @@ class KernelWhitelist:
         return self.names is None or kernel_name in self.names
 
 
-class TraceBuffer:
-    """Append-only record buffer with region registry.
+class RecordView(Sequence[AccessRecord]):
+    """Lazy sequence view over a TraceBuffer's records.
 
-    Mirrors CUTHERMO's GPU-queue + memory-registration callbacks: the
-    collector appends records; the Analyzer drains them into the
-    sector_history_map.  ``max_records`` guards runaway full-grid traces.
+    Materializes ``AccessRecord`` objects on demand so legacy consumers
+    (tests, ad-hoc scripts) keep working against the columnar store.
     """
 
+    def __init__(self, buf: "TraceBuffer"):
+        self._buf = buf
+
+    def __len__(self) -> int:
+        return len(self._buf)
+
+    def __iter__(self) -> Iterator[AccessRecord]:
+        self._buf._flush_pending()
+        for chunk in self._buf.chunks:
+            site = chunk.site
+            if chunk.ptr is None:
+                touches = tuple(
+                    zip(chunk.tags.tolist(), chunk.words.tolist())
+                )
+                for row in chunk.pids:
+                    yield AccessRecord(
+                        array=site.array,
+                        site=site.site,
+                        space=site.space,
+                        kind=site.kind,
+                        program_id=tuple(int(x) for x in row),
+                        touches=touches,
+                    )
+            else:
+                for i in range(chunk.n_records):
+                    yield chunk.record(i)
+
+    def __getitem__(self, i):  # pragma: no cover - convenience only
+        if isinstance(i, slice):
+            return list(self)[i]
+        n = len(self)
+        if i < 0:
+            i += n
+        if not 0 <= i < n:
+            raise IndexError(i)
+        self._buf._flush_pending()
+        for chunk in self._buf.chunks:
+            if i < chunk.n_records:
+                return chunk.record(i)
+            i -= chunk.n_records
+        raise IndexError(i)
+
+
+class TraceBuffer:
+    """Append-only columnar record buffer with region registry.
+
+    Mirrors CUTHERMO's GPU-queue + memory-registration callbacks: the
+    collector appends chunks of records; the Analyzer drains them into
+    the sector_history_map.  ``max_records`` guards runaway full-grid
+    traces (the cap counts *records* — (site, program) events — exactly
+    as the seed per-object buffer did, and overflow is surfaced once in
+    ``dropped``).
+    """
+
+    _group_counter = itertools.count(1)
+
     def __init__(self, max_records: int = 2_000_000):
-        self.records: List[AccessRecord] = []
+        self.chunks: List[TraceChunk] = []
         self.regions: dict[str, RegionInfo] = {}
         self.max_records = max_records
         self.dropped = 0
+        self._n_records = 0
+        self._pending: List[AccessRecord] = []
 
+    # -- registration ------------------------------------------------------
     def register_region(self, region: RegionInfo) -> None:
         self.regions[region.name] = region
 
+    @classmethod
+    def new_group(cls) -> int:
+        """A fresh disjointness token (one per collect-call x site)."""
+        return next(cls._group_counter)
+
+    # -- record-at-a-time compat path --------------------------------------
     def append(self, rec: AccessRecord) -> None:
-        if len(self.records) >= self.max_records:
+        if self._n_records >= self.max_records:
             self.dropped += 1
             return
-        self.records.append(rec)
+        self._pending.append(rec)
+        self._n_records += 1
 
     def extend(self, recs: Iterable[AccessRecord]) -> None:
         for r in recs:
             self.append(r)
 
+    def _flush_pending(self) -> None:
+        """Pack buffered per-record appends into columnar chunks."""
+        if not self._pending:
+            return
+        pending, self._pending = self._pending, []
+        # group consecutive records sharing (site, pid-ndim) into one chunk
+        run: List[AccessRecord] = []
+
+        def _pack(run: List[AccessRecord]) -> None:
+            first = run[0]
+            site = SiteInfo(first.array, first.site, first.space, first.kind)
+            ndim = len(first.program_id)
+            pids = np.asarray(
+                [r.program_id for r in run], dtype=np.int64
+            ).reshape(len(run), ndim)
+            counts = np.asarray([len(r.touches) for r in run], dtype=np.int64)
+            ptr = np.zeros(len(run) + 1, dtype=np.int64)
+            np.cumsum(counts, out=ptr[1:])
+            flat = [t for r in run for t in r.touches]
+            if flat:
+                pairs = np.asarray(flat, dtype=np.int64).reshape(-1, 2)
+                tags, words = pairs[:, 0].copy(), pairs[:, 1].copy()
+            else:
+                tags = np.empty(0, dtype=np.int64)
+                words = np.empty(0, dtype=np.int64)
+            self.chunks.append(
+                TraceChunk(site=site, pids=pids, tags=tags, words=words,
+                           ptr=ptr, group=None)
+            )
+
+        for rec in pending:
+            if run and (
+                rec.array != run[0].array
+                or rec.site != run[0].site
+                or rec.space != run[0].space
+                or rec.kind != run[0].kind
+                or len(rec.program_id) != len(run[0].program_id)
+            ):
+                _pack(run)
+                run = []
+            run.append(rec)
+        if run:
+            _pack(run)
+
+    # -- bulk columnar path ------------------------------------------------
+    def append_block(
+        self,
+        site: SiteInfo,
+        pids: np.ndarray,
+        tags: np.ndarray,
+        words: np.ndarray,
+        ptr: Optional[np.ndarray] = None,
+        group: Optional[int] = None,
+    ) -> None:
+        """Append P records in one call (broadcast or CSR — see TraceChunk).
+
+        Enforces ``max_records`` at record granularity: a block that
+        overflows the cap is truncated and the overflow is counted in
+        ``dropped`` exactly once.
+        """
+        pids = np.asarray(pids, dtype=np.int64)
+        if pids.ndim == 1:
+            pids = pids[:, None]
+        p = int(pids.shape[0])
+        if p == 0:
+            return
+        admit = self.max_records - self._n_records
+        if admit <= 0:
+            self.dropped += p
+            return
+        if p > admit:
+            self.dropped += p - admit
+            pids = pids[:admit]
+            if ptr is not None:
+                cut = int(ptr[admit])
+                tags = tags[:cut]
+                words = words[:cut]
+                ptr = ptr[: admit + 1]
+            p = admit
+        self._flush_pending()
+        self.chunks.append(
+            TraceChunk(
+                site=site,
+                pids=pids,
+                tags=np.asarray(tags, dtype=np.int64),
+                words=np.asarray(words, dtype=np.int64),
+                ptr=None if ptr is None else np.asarray(ptr, dtype=np.int64),
+                group=group,
+            )
+        )
+        self._n_records += p
+
+    # -- views -------------------------------------------------------------
+    @property
+    def records(self) -> RecordView:
+        return RecordView(self)
+
+    def iter_chunks(self) -> Iterator[TraceChunk]:
+        self._flush_pending()
+        return iter(self.chunks)
+
+    @property
+    def n_touch_events(self) -> int:
+        self._flush_pending()
+        return sum(c.n_touch_events for c in self.chunks)
+
     def __len__(self) -> int:
-        return len(self.records)
+        return self._n_records
 
     def clear(self) -> None:
-        self.records.clear()
+        self.chunks.clear()
+        self._pending.clear()
+        self._n_records = 0
         self.dropped = 0
+
+
+def unique_pairs(
+    primary: np.ndarray, secondary: np.ndarray
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Distinct (primary, secondary) pairs, sorted by (primary, secondary).
+
+    The shared dedup idiom of the columnar engine (per-record touch sets,
+    distinct (key, pid) events): lexsort + first-occurrence mask.
+    """
+    order = np.lexsort((secondary, primary))
+    a, b = primary[order], secondary[order]
+    keep = np.ones(a.shape, bool)
+    keep[1:] = (a[1:] != a[:-1]) | (b[1:] != b[:-1])
+    return a[keep], b[keep]
 
 
 def linearize(program_id: ProgramId, grid: Sequence[int]) -> int:
@@ -139,6 +409,19 @@ def linearize(program_id: ProgramId, grid: Sequence[int]) -> int:
     if not program_id:
         return 0
     return int(np.ravel_multi_index(tuple(program_id), tuple(grid)))
+
+
+def linearize_array(pids: np.ndarray, grid: Sequence[int]) -> np.ndarray:
+    """Vectorized ``linearize``: (P, ndim) coords -> (P,) int64 linear ids."""
+    pids = np.asarray(pids, dtype=np.int64)
+    if pids.ndim != 2:
+        pids = pids.reshape(len(pids), -1)
+    if pids.shape[1] == 0:
+        return np.zeros(pids.shape[0], dtype=np.int64)
+    grid = tuple(int(g) for g in grid)
+    return np.asarray(
+        np.ravel_multi_index(tuple(pids.T), grid), dtype=np.int64
+    ).reshape(-1)
 
 
 def enumerate_grid(grid: Sequence[int]) -> Iterable[ProgramId]:
@@ -169,6 +452,30 @@ def sampled_grid(
     for mid in range(lo, hi):
         for pid_tail in enumerate_grid(tail):
             yield head + (mid,) + pid_tail
+
+
+def sampled_grid_array(
+    grid: Sequence[int], sampler: GridSampler
+) -> np.ndarray:
+    """Vectorized ``sampled_grid``: (P, ndim) int64 coords, row-major order."""
+    grid = tuple(int(g) for g in grid)
+    ndim = len(grid)
+    if ndim == 0:
+        return np.zeros((1, 0), dtype=np.int64)
+    if sampler.target is None or min(len(sampler.target), ndim) == 0:
+        axes = [np.arange(g, dtype=np.int64) for g in grid]
+    else:
+        k = min(len(sampler.target), ndim)
+        lo = sampler.target[k - 1] * sampler.window
+        hi = min(lo + sampler.window, grid[k - 1])
+        axes = [
+            np.asarray([sampler.target[d]], dtype=np.int64)
+            for d in range(k - 1)
+        ]
+        axes.append(np.arange(lo, hi, dtype=np.int64))
+        axes.extend(np.arange(g, dtype=np.int64) for g in grid[k:])
+    mesh = np.meshgrid(*axes, indexing="ij")
+    return np.stack([m.reshape(-1) for m in mesh], axis=1)
 
 
 DynamicAccessFn = Callable[..., Iterable[Tuple[int, int]]]

@@ -1,0 +1,239 @@
+"""Golden equivalence: the columnar engine vs the seed per-record engine.
+
+Every case asserts *bit-identical* heat maps — region set, sector tags,
+word temps, sector temps, contributor counts, record counts, plus the
+derived transaction model (``sector_transactions``, ``waste_ratio``).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import analyze
+from repro.core._reference import (
+    ReferenceAnalyzer,
+    analyze_reference,
+    collect_reference,
+    drain_dynamic_reference,
+)
+from repro.core.collector import (
+    KernelSpec,
+    OperandSpec,
+    ScratchSpec,
+    collect,
+    drain_dynamic,
+)
+from repro.core.heatmap import Analyzer
+from repro.core.trace import GridSampler
+
+
+def assert_heatmaps_identical(got, want):
+    assert got.kernel == want.kernel
+    assert got.grid == want.grid
+    assert got.n_records == want.n_records
+    assert got.dropped == want.dropped
+    assert got.region_names() == want.region_names()
+    for g, w in zip(got.regions, want.regions):
+        name = w.region.name
+        assert g.region.name == name
+        assert g.region.space == w.region.space
+        assert g.n_programs == w.n_programs, name
+        np.testing.assert_array_equal(
+            g.tags_array, w.tags_array, err_msg=f"tags of {name}"
+        )
+        np.testing.assert_array_equal(
+            g.word_temps_matrix, w.word_temps_matrix,
+            err_msg=f"word temps of {name}",
+        )
+        np.testing.assert_array_equal(
+            g.sector_temps_array, w.sector_temps_array,
+            err_msg=f"sector temps of {name}",
+        )
+        # row views agree too (lazy materialization path)
+        assert g.rows == w.rows, name
+    assert got.sector_transactions() == want.sector_transactions()
+    assert got.useful_word_transactions() == want.useful_word_transactions()
+    assert got.waste_ratio() == want.waste_ratio()
+    for name in got.region_names():
+        assert got.waste_ratio(name) == want.waste_ratio(name), name
+        assert (
+            got.sector_transactions(name) == want.sector_transactions(name)
+        ), name
+
+
+SAMPLERS = [GridSampler((0,), window=8), GridSampler(None)]
+
+
+@pytest.mark.parametrize("sampler", SAMPLERS, ids=["window8", "full"])
+def test_gemm_equivalence(sampler):
+    from repro.kernels.gemm import gemm_v00_spec, gemm_v01_spec, gemm_v02_spec
+
+    for spec in (
+        gemm_v00_spec(128, 128, 128),
+        gemm_v01_spec(256, 256, 256),
+        gemm_v02_spec(256, 256, 256, bm=64, bn=64, bk=64),
+    ):
+        assert_heatmaps_identical(
+            analyze(spec, sampler), analyze_reference(spec, sampler)
+        )
+
+
+@pytest.mark.parametrize("sampler", SAMPLERS, ids=["window8", "full"])
+def test_spmv_misaligned_origin_equivalence(sampler):
+    from repro.kernels.spmv import spmv_csr_spec
+
+    rng = np.random.default_rng(7)
+    colidx = rng.integers(0, 2048, size=4096).astype(np.int32)
+    spec = spmv_csr_spec(4096, 2048, block_rows=512)
+    ctx = {"col_indices": colidx}
+    assert_heatmaps_identical(
+        analyze(spec, sampler, dynamic_context=ctx),
+        analyze_reference(spec, sampler, dynamic_context=ctx),
+    )
+
+
+@pytest.mark.parametrize("sampler", SAMPLERS, ids=["window8", "full"])
+def test_dynamic_gather_equivalence(sampler):
+    from repro.kernels.histogram import hist_naive_spec
+
+    rng = np.random.default_rng(3)
+    cells = rng.integers(0, 512, size=8192).astype(np.int64)
+    spec = hist_naive_spec(8192, 512, block=1024)
+    ctx = {"cells": cells}
+    assert_heatmaps_identical(
+        analyze(spec, sampler, dynamic_context=ctx),
+        analyze_reference(spec, sampler, dynamic_context=ctx),
+    )
+
+
+@pytest.mark.parametrize("sampler", SAMPLERS, ids=["window8", "full"])
+def test_scratch_accumulator_equivalence(sampler):
+    from repro.kernels.histogram import hist_opt2_spec
+    from repro.kernels.ttm import cuszp_like_spec, ttm_scratch_spec
+
+    for spec in (
+        ttm_scratch_spec(256, 8, 32),
+        hist_opt2_spec(16384, 512),
+        cuszp_like_spec(32),
+    ):
+        assert_heatmaps_identical(
+            analyze(spec, sampler), analyze_reference(spec, sampler)
+        )
+
+
+def test_misc_kernels_full_equivalence():
+    """Sweep the remaining case-study specs at full trace."""
+    from repro.kernels.gramschm import k3_naive_block_spec, k3_opt_spec
+    from repro.kernels.spmv import spmv_zigzag_spec
+    from repro.kernels.ttm import ttm_fused_spec
+
+    rng = np.random.default_rng(11)
+    colidx = rng.integers(0, 1024, size=2048).astype(np.int32)
+    cases = [
+        (k3_naive_block_spec(256, 256, 256, k=3), None),
+        (k3_opt_spec(256, 256, 256, k=3), None),
+        (ttm_fused_spec(128, 8, 32), None),
+        (spmv_zigzag_spec(2048, 1024, block_rows=512),
+         {"col_indices": colidx}),
+    ]
+    for spec, ctx in cases:
+        assert_heatmaps_identical(
+            analyze(spec, GridSampler(None), dynamic_context=ctx),
+            analyze_reference(spec, GridSampler(None), dynamic_context=ctx),
+        )
+
+
+def test_drain_dynamic_equivalence():
+    op = OperandSpec("x", (4096,), np.float32, (4096,), lambda i: (0,))
+    rng = np.random.default_rng(5)
+    trace = rng.integers(-64, 4096, size=(8, 96))
+    for sampler in SAMPLERS:
+        buf = drain_dynamic("k", (8,), op, trace, sampler)
+        ref = drain_dynamic_reference("k", (8,), op, trace, sampler)
+        an, ran = Analyzer("k", (8,), "s"), ReferenceAnalyzer("k", (8,), "s")
+        an.ingest(buf)
+        ran.ingest(ref)
+        assert_heatmaps_identical(an.flush(), ran.flush())
+        # record views agree up to object identity
+        got = sorted(
+            (r.program_id, r.touches) for r in buf.records
+        )
+        want = sorted((r.program_id, r.touches) for r in ref.records)
+        assert got == want
+
+
+def test_drain_dynamic_valid_mask_equivalence():
+    op = OperandSpec("x", (1024, 256), np.float32, (8, 256), lambda i: (i, 0))
+    rng = np.random.default_rng(9)
+    trace = rng.integers(0, 1024 * 256, size=(4, 32))
+    mask = rng.random((4, 32)) < 0.5
+    buf = drain_dynamic("k", (4,), op, trace, GridSampler(None), mask)
+    ref = drain_dynamic_reference("k", (4,), op, trace, GridSampler(None), mask)
+    an, ran = Analyzer("k", (4,), "s"), ReferenceAnalyzer("k", (4,), "s")
+    an.ingest(buf)
+    ran.ingest(ref)
+    assert_heatmaps_identical(an.flush(), ran.flush())
+
+
+def test_compat_append_path_equivalence():
+    """Record-at-a-time appends (the exact path) match the seed bitmasks,
+    including duplicate touches and repeated program ids."""
+    from repro.core._reference import ReferenceTraceBuffer
+    from repro.core.tiles import TileGeometry
+    from repro.core.trace import AccessRecord, RegionInfo, TraceBuffer
+
+    geom = TileGeometry(shape=(64, 256), itemsize=4, name="A")
+    recs = [
+        ((0,), [(0, 0), (0, 0), (1, 3)]),  # duplicate touch
+        ((1,), [(0, 0)]),
+        ((0,), [(1, 3), (2, 7)]),  # repeated pid, overlapping touch
+        ((2,), []),  # zero-touch record still counts as a contributor
+    ]
+    buf, ref = TraceBuffer(), ReferenceTraceBuffer()
+    for b in (buf, ref):
+        b.register_region(RegionInfo("A", geom))
+        for pid, touches in recs:
+            b.append(
+                AccessRecord(array="A", site="k/A", space="hbm", kind="load",
+                             program_id=pid, touches=tuple(touches))
+            )
+    an, ran = Analyzer("k", (4,), "s"), ReferenceAnalyzer("k", (4,), "s")
+    an.ingest(buf)
+    ran.ingest(ref)
+    assert_heatmaps_identical(an.flush(), ran.flush())
+
+
+def test_compress_region_matches_compress_rows():
+    from repro.core.heatmap import compress_region, compress_rows
+    from repro.kernels.gemm import gemm_v00_spec
+    from repro.kernels.spmv import spmv_csr_spec
+
+    rng = np.random.default_rng(2)
+    colidx = rng.integers(0, 1024, size=2048).astype(np.int32)
+    heatmaps = [
+        analyze(gemm_v00_spec(512, 512, 512), GridSampler((0,), window=32)),
+        analyze(spmv_csr_spec(2048, 1024, block_rows=512), GridSampler(None),
+                dynamic_context={"col_indices": colidx}),
+    ]
+    for hm in heatmaps:
+        for rh in hm.regions:
+            assert compress_region(rh) == compress_rows(rh.rows)
+
+
+def test_mixed_buffer_ingest_equivalence():
+    """Two collect() buffers (overlapping pid windows) ingested into one
+    Analyzer must still dedupe contributors exactly (cross-group path)."""
+    from repro.kernels.gemm import gemm_v01_spec
+
+    spec = gemm_v01_spec(256, 256, 256)
+    buf1, _ = collect(spec, GridSampler((0,), window=8))
+    buf2, _ = collect(spec, GridSampler((0,), window=16))  # superset window
+    an = Analyzer(spec.name, spec.grid, "mixed")
+    an.ingest(buf1)
+    an.ingest(buf2)
+
+    ref1, _ = collect_reference(spec, GridSampler((0,), window=8))
+    ref2, _ = collect_reference(spec, GridSampler((0,), window=16))
+    ran = ReferenceAnalyzer(spec.name, spec.grid, "mixed")
+    ran.ingest(ref1)
+    ran.ingest(ref2)
+    assert_heatmaps_identical(an.flush(), ran.flush())

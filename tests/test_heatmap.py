@@ -1,6 +1,9 @@
 """Analyzer invariants (the paper's sector_history_map), property-tested."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests degrade to skips
 from hypothesis import given, settings, strategies as st
 
 from repro.core.heatmap import Analyzer, SectorHistory, compress_rows

@@ -4,6 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests degrade to skips
 from hypothesis import given, settings, strategies as st
 
 import repro.kernels as K

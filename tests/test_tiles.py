@@ -2,6 +2,7 @@
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests degrade to skips
 from hypothesis import given, settings, strategies as st
 
 from repro.core.tiles import LANES, TileGeometry, block_to_2d, sublanes_for

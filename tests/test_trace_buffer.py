@@ -1,0 +1,208 @@
+"""Columnar TraceBuffer: record view, caps, and drop accounting."""
+
+import numpy as np
+
+from repro.core.heatmap import Analyzer
+from repro.core.tiles import TileGeometry
+from repro.core.trace import (
+    AccessRecord,
+    RegionInfo,
+    SiteInfo,
+    TraceBuffer,
+    sampled_grid,
+    sampled_grid_array,
+    GridSampler,
+)
+
+
+def _site(name="A"):
+    return SiteInfo(array=name, site=f"k/{name}", space="hbm", kind="load")
+
+
+def _region(buf, name="A", shape=(64, 256)):
+    buf.register_region(
+        RegionInfo(name, TileGeometry(shape=shape, itemsize=4, name=name))
+    )
+
+
+def test_append_block_broadcast_record_view():
+    buf = TraceBuffer()
+    _region(buf)
+    pids = np.arange(4)[:, None]
+    buf.append_block(_site(), pids, np.array([0, 1]), np.array([2, 3]))
+    assert len(buf) == 4
+    recs = list(buf.records)
+    assert [r.program_id for r in recs] == [(0,), (1,), (2,), (3,)]
+    assert all(r.touches == ((0, 2), (1, 3)) for r in recs)
+
+
+def test_append_block_csr_record_view():
+    buf = TraceBuffer()
+    _region(buf)
+    buf.append_block(
+        _site(),
+        np.array([[0], [1]]),
+        np.array([5, 6, 7]),
+        np.array([0, 1, 2]),
+        ptr=np.array([0, 1, 3]),
+    )
+    recs = list(buf.records)
+    assert recs[0].touches == ((5, 0),)
+    assert recs[1].touches == ((6, 1), (7, 2))
+
+
+def test_mixed_append_orders_preserved():
+    buf = TraceBuffer()
+    _region(buf)
+    buf.append(
+        AccessRecord("A", "k/A", "hbm", "load", (9,), ((1, 1),))
+    )
+    buf.append_block(_site(), np.array([[0]]), np.array([2]), np.array([0]))
+    recs = list(buf.records)
+    assert [r.program_id for r in recs] == [(9,), (0,)]
+    assert len(buf) == 2
+
+
+def test_max_records_cap_truncates_block_and_counts_drops():
+    buf = TraceBuffer(max_records=3)
+    _region(buf)
+    buf.append_block(
+        _site(), np.arange(5)[:, None], np.array([0]), np.array([0])
+    )
+    assert len(buf) == 3 and buf.dropped == 2
+    # CSR block entirely dropped once full
+    buf.append_block(
+        _site(),
+        np.array([[7], [8]]),
+        np.array([1, 2]),
+        np.array([0, 0]),
+        ptr=np.array([0, 1, 2]),
+    )
+    assert len(buf) == 3 and buf.dropped == 4
+    recs = list(buf.records)
+    assert [r.program_id for r in recs] == [(0,), (1,), (2,)]
+
+
+def test_max_records_cap_csr_truncation_keeps_touch_alignment():
+    buf = TraceBuffer(max_records=2)
+    _region(buf)
+    buf.append_block(
+        _site(),
+        np.array([[0], [1], [2]]),
+        np.array([0, 1, 2, 3, 4, 5]),
+        np.array([0, 1, 2, 3, 4, 5]),
+        ptr=np.array([0, 2, 4, 6]),
+    )
+    assert len(buf) == 2 and buf.dropped == 1
+    recs = list(buf.records)
+    assert recs[0].touches == ((0, 0), (1, 1))
+    assert recs[1].touches == ((2, 2), (3, 3))
+
+
+def test_per_record_append_respects_cap():
+    buf = TraceBuffer(max_records=2)
+    _region(buf)
+    for p in range(5):
+        buf.append(
+            AccessRecord("A", "k/A", "hbm", "load", (p,), ((0, 0),))
+        )
+    assert len(buf) == 2 and buf.dropped == 3
+
+
+def test_dropped_surfaced_once_across_multiple_buffers():
+    """Regression: drops from several ingested buffers sum exactly once."""
+    bufs = []
+    for lo in (0, 4):
+        buf = TraceBuffer(max_records=2)
+        _region(buf)
+        buf.append_block(
+            _site(), np.arange(lo, lo + 4)[:, None],
+            np.array([0]), np.array([0]),
+        )
+        bufs.append(buf)
+    an = Analyzer("k", (8,), "full")
+    for buf in bufs:
+        an.ingest(buf)
+    hm = an.flush()
+    assert hm.dropped == 4  # 2 per buffer, counted exactly once each
+    assert hm.n_records == 4
+
+
+def test_dropped_not_double_counted_on_reingest():
+    """Regression: re-ingesting the same buffer must not re-surface its
+    drops (or its records) — ingestion is an incremental drain."""
+    buf = TraceBuffer(max_records=2)
+    _region(buf)
+    buf.append_block(
+        _site(), np.arange(4)[:, None], np.array([0]), np.array([0])
+    )
+    an = Analyzer("k", (8,), "full")
+    an.ingest(buf)
+    an.ingest(buf)  # seed double-counted both records and drops here
+    hm = an.flush()
+    assert hm.dropped == 2
+    assert hm.n_records == 2
+    assert hm.regions[0].max_sector_temp == 2
+
+    # incremental drain: later appends (and later drops) land on re-ingest
+    buf2 = TraceBuffer(max_records=3)
+    _region(buf2)
+    buf2.append_block(_site(), np.array([[0]]), np.array([0]), np.array([0]))
+    an2 = Analyzer("k", (8,), "full")
+    an2.ingest(buf2)
+    buf2.append_block(
+        _site(), np.arange(1, 5)[:, None], np.array([0]), np.array([0])
+    )
+    an2.ingest(buf2)
+    hm2 = an2.flush()
+    assert hm2.n_records == 3 and hm2.dropped == 2
+    assert hm2.regions[0].sector_temps_array.tolist() == [3]
+
+
+def test_reingest_after_clear_treats_buffer_as_fresh():
+    """Regression: clear()ing and refilling a buffer between ingests must
+    ingest the new contents (and their drops) instead of silently skipping
+    them behind the stale per-buffer cursor."""
+    buf = TraceBuffer(max_records=1)
+    _region(buf)
+    buf.append_block(
+        _site(), np.arange(2)[:, None], np.array([0]), np.array([0])
+    )
+    an = Analyzer("k", (8,), "full")
+    an.ingest(buf)
+    buf.clear()
+    buf.append_block(
+        _site(), np.arange(2, 5)[:, None], np.array([1]), np.array([0])
+    )
+    an.ingest(buf)
+    hm = an.flush()
+    assert hm.n_records == 2  # one admitted per fill
+    assert hm.dropped == 3  # 1 from the first fill + 2 from the second
+    assert hm.regions[0].tags_array.tolist() == [0, 1]
+
+
+def test_clear_resets_columnar_state():
+    buf = TraceBuffer(max_records=2)
+    _region(buf)
+    buf.append_block(
+        _site(), np.arange(4)[:, None], np.array([0]), np.array([0])
+    )
+    buf.clear()
+    assert len(buf) == 0 and buf.dropped == 0 and list(buf.records) == []
+
+
+def test_sampled_grid_array_matches_generator():
+    cases = [
+        ((16,), GridSampler((0,), window=4)),
+        ((16,), GridSampler((1,), window=4)),
+        ((4, 2), GridSampler((0,), window=2)),
+        ((2, 3, 4), GridSampler((1, 2))),
+        ((2, 3, 4), GridSampler(None)),
+        ((5,), GridSampler(())),
+        ((), GridSampler((0,))),
+    ]
+    for grid, sampler in cases:
+        want = list(sampled_grid(grid, sampler))
+        got = [tuple(int(x) for x in row)
+               for row in sampled_grid_array(grid, sampler)]
+        assert got == want, (grid, sampler.describe())
