@@ -1,65 +1,69 @@
 """Generate the heat-map GUI artifacts (paper Fig. 5) for every case
-study, plus before/after diffs, into artifacts/heatmaps/.
+study through the session subsystem, into artifacts/heatmaps/.
 
     PYTHONPATH=src python examples/heatmap_gallery.py
+
+Builds ONE profiling session with two iterations — iter0 profiles every
+registered kernel's baseline variant, iter1 the optimized variants —
+then diffs them (the paper's before/after Table III) and writes a
+self-contained report bundle per iteration.  The same artifacts are
+reachable from the command line:
+
+    cuthermo profile --all --out artifacts/heatmaps/session
+    cuthermo report  artifacts/heatmaps/session/iter0
 """
 
 import os
+import shutil
 
-import numpy as np
-
-from repro.core import analyze
-from repro.core.diff import diff
-from repro.core.render import save
-from repro.core.trace import GridSampler
-from repro.kernels.gemm import gemm_v00_spec, gemm_v01_spec, gemm_v02_spec
-from repro.kernels.gramschm import k3_naive_spec, k3_opt_spec
-from repro.kernels.histogram import hist_naive_spec, hist_opt2_spec
-from repro.kernels.spmv import spmv_csr_spec, spmv_zigzag_spec
-from repro.kernels.ttm import cuszp_like_spec, ttm_fused_spec, ttm_scratch_spec
+from repro import kernels as kreg
+from repro.core.render import ReportEntry, write_report_bundle
+from repro.core.session import ProfileSession, profile_kernel
 
 OUT = os.path.join(os.path.dirname(__file__), "..", "artifacts", "heatmaps")
 
 
+def _profile(entry, variant):
+    return profile_kernel(
+        variant.spec(),
+        entry.sampler(),
+        variant.dynamic_context(),
+        name=entry.name,
+        variant=variant.name,
+        region_map=entry.region_map,
+    )
+
+
 def main() -> None:
-    os.makedirs(OUT, exist_ok=True)
-    rng = np.random.default_rng(0)
-    S = GridSampler((0,), window=32)
-    colidx = rng.integers(0, 36417, size=65536).astype(np.int32)
-    cells = rng.integers(0, 2048, size=65536).astype(np.int64)
+    out = os.path.normpath(OUT)
+    os.makedirs(out, exist_ok=True)
+    sess_dir = os.path.join(out, "session")
+    shutil.rmtree(sess_dir, ignore_errors=True)
+    sess = ProfileSession(sess_dir)
 
-    pairs = {
-        "gemm": (analyze(gemm_v00_spec(1024, 1024, 1024), S),
-                 analyze(gemm_v01_spec(1024, 1024, 1024), S), None),
-        "gemm_tiled": (analyze(gemm_v01_spec(1024, 1024, 1024), S),
-                       analyze(gemm_v02_spec(1024, 1024, 1024), GridSampler(None)),
-                       None),
-        "spmv": (analyze(spmv_csr_spec(65536, 36417), S,
-                         dynamic_context={"col_indices": colidx}),
-                 analyze(spmv_zigzag_spec(65536, 36417), S,
-                         dynamic_context={"col_indices": colidx}), None),
-        "pasta_ttm": (analyze(ttm_scratch_spec(512, 8, 32), S),
-                      analyze(ttm_fused_spec(512, 8, 32), S), None),
-        "gramschm": (analyze(k3_naive_spec(512, 512, 512, k=3), GridSampler(None)),
-                     analyze(k3_opt_spec(512, 512, 512, k=3), GridSampler(None)),
-                     {"q": "qT"}),
-        "gpumd": (analyze(hist_naive_spec(65536, 2048), GridSampler(None),
-                          dynamic_context={"cells": cells}),
-                  analyze(hist_opt2_spec(65536, 2048), GridSampler(None)), None),
-    }
-    cusz = analyze(cuszp_like_spec(64), S)
-    save(cusz, os.path.join(OUT, "cuszp_before.html"))
+    # iter0: every baseline; iter1: the last (most-optimized) variant.
+    # Region renames (gramschm q -> qT) ride along on each ProfiledKernel
+    # and align the diff automatically.
+    baselines, optimized = [], []
+    for name in kreg.names():
+        entry = kreg.get(name)
+        baselines.append(_profile(entry, entry.variants[0]))
+        optimized.append(_profile(entry, entry.variants[-1]))
+    it0 = sess.add_iteration(baselines, label="baseline")
+    it1 = sess.add_iteration(optimized, label="optimized")
 
-    for name, (before, after, rmap) in pairs.items():
-        save(before, os.path.join(OUT, f"{name}_before.html"))
-        save(after, os.path.join(OUT, f"{name}_after.html"))
-        save(before, os.path.join(OUT, f"{name}_before.csv"))
-        save(after, os.path.join(OUT, f"{name}_after.csv"))
-        d = diff(before, after, region_map=rmap)
-        with open(os.path.join(OUT, f"{name}_diff.txt"), "w") as f:
-            f.write(d.summary() + "\n")
-        print(d.summary().splitlines()[1], "<-", name)
-    print(f"\nwrote GUI heat maps + diffs to {os.path.normpath(OUT)}")
+    for it in (it0, it1):
+        entries = [ReportEntry.from_profiled(pk) for pk in it.kernels]
+        write_report_bundle(
+            entries, os.path.join(str(it.path), "report"),
+            title=f"cuthermo gallery — {it.label}",
+        )
+
+    sd = sess.diff(it0, it1)
+    with open(os.path.join(out, "gallery_diff.txt"), "w") as f:
+        f.write(sd.summary() + "\n")
+    print(sd.summary())
+    print(f"\nwrote session + report bundles under {sess_dir}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,312 @@
+"""``cuthermo`` — the command-line front end of the profiling loop.
+
+Subcommands (see ``docs/cli.md`` for transcripts):
+
+* ``cuthermo kernels`` — list the registered case-study kernels and
+  their optimization-ladder variants.
+* ``cuthermo profile --kernel gemm --out sess/`` — profile one or more
+  kernels into the next iteration of a session directory.
+* ``cuthermo report sess/iter0`` — rebuild the report bundle (HTML
+  gallery + markdown digest + CSVs) for a stored iteration.
+* ``cuthermo diff sess/iter0 sess/iter1`` — align two iterations and
+  print per-kernel improved/regressed/fixed-pattern verdicts.
+
+Heavy imports (numpy, jax-backed kernel modules) happen inside the
+subcommand handlers, so ``cuthermo --help`` stays instant.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Optional
+
+
+def _build_parser() -> argparse.ArgumentParser:
+    """Construct the argparse tree for every subcommand."""
+    p = argparse.ArgumentParser(
+        prog="cuthermo",
+        description="TPU memory heat-map profiler (CUTHERMO reproduction): "
+        "profile Pallas kernels, detect inefficiency patterns, and track "
+        "tuning iterations.",
+    )
+    sub = p.add_subparsers(dest="command", metavar="command")
+
+    k = sub.add_parser(
+        "kernels", help="list registered kernels and their variants"
+    )
+    k.set_defaults(func=_cmd_kernels)
+
+    pr = sub.add_parser(
+        "profile",
+        help="profile kernels into the next iteration of a session",
+    )
+    pr.add_argument(
+        "--kernel",
+        "-k",
+        action="append",
+        default=[],
+        metavar="NAME[:VARIANT]",
+        help="kernel to profile (repeatable); 'gemm' uses the baseline "
+        "variant, 'gemm:v01' a specific one",
+    )
+    pr.add_argument(
+        "--all", action="store_true", help="profile every registered kernel"
+    )
+    pr.add_argument(
+        "--out",
+        "-o",
+        default="cuthermo-session",
+        metavar="DIR",
+        help="session directory (created on first use; default: "
+        "./cuthermo-session)",
+    )
+    pr.add_argument(
+        "--sampler",
+        default=None,
+        metavar="SPEC",
+        help="grid sampler: 'full', or 'window:N' (pin the leading grid "
+        "coordinate, admit N programs); default: per-kernel registry choice",
+    )
+    pr.add_argument("--label", default=None, help="iteration label")
+    pr.add_argument("--note", default="", help="free-form iteration note")
+    pr.add_argument(
+        "--quiet", "-q", action="store_true",
+        help="suppress per-kernel text reports",
+    )
+    pr.set_defaults(func=_cmd_profile)
+
+    rp = sub.add_parser(
+        "report", help="write the report bundle for a stored iteration"
+    )
+    rp.add_argument(
+        "iteration",
+        help="iteration directory (sess/iter0), or a session directory "
+        "(its latest iteration is used)",
+    )
+    rp.add_argument(
+        "--out",
+        "-o",
+        default=None,
+        metavar="DIR",
+        help="bundle output directory (default: <iteration>/report)",
+    )
+    rp.add_argument("--title", default=None, help="report title")
+    rp.set_defaults(func=_cmd_report)
+
+    df = sub.add_parser(
+        "diff", help="compare two stored iterations kernel-by-kernel"
+    )
+    df.add_argument("before", help="baseline iteration directory")
+    df.add_argument("after", help="candidate iteration directory")
+    df.add_argument(
+        "--region-map",
+        action="append",
+        default=[],
+        metavar="KERNEL:OLD=NEW",
+        help="rename a region between iterations (repeatable), e.g. "
+        "'gramschm:q=qT' when an optimization renames a buffer",
+    )
+    df.add_argument(
+        "--fail-on-regression",
+        action="store_true",
+        help="exit 1 when any kernel regressed (CI gating)",
+    )
+    df.set_defaults(func=_cmd_diff)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# handlers
+# ---------------------------------------------------------------------------
+
+
+def _parse_sampler(spec: Optional[str]):
+    """Parse a ``--sampler`` value into a GridSampler (None = registry's)."""
+    if spec is None:
+        return None
+    from repro.core.trace import GridSampler
+
+    if spec == "full":
+        return GridSampler(None)
+    if spec.startswith("window:"):
+        try:
+            window = int(spec.split(":", 1)[1])
+        except ValueError:
+            window = 0
+        if window >= 1:
+            return GridSampler((0,), window=window)
+    print(
+        f"cuthermo: bad --sampler {spec!r} (use 'full' or 'window:N' "
+        "with N >= 1)",
+        file=sys.stderr,
+    )
+    raise SystemExit(2)
+
+
+def _cmd_kernels(args: argparse.Namespace) -> int:
+    """Handler for ``cuthermo kernels``."""
+    from repro import kernels as kreg
+
+    for name in kreg.names():
+        entry = kreg.get(name)
+        variants = ", ".join(
+            v.name + ("*" if i == 0 else "")
+            for i, v in enumerate(entry.variants)
+        )
+        print(f"{name:<12} [{variants}]  {entry.summary}")
+    print("(* = default/baseline variant)")
+    return 0
+
+
+def _cmd_profile(args: argparse.Namespace) -> int:
+    """Handler for ``cuthermo profile``."""
+    from repro import kernels as kreg
+    from repro.core.advisor import format_report
+    from repro.core.session import (
+        ProfileSession,
+        SessionError,
+        profile_kernel,
+    )
+
+    refs = list(args.kernel)
+    if args.all:
+        refs += [n for n in kreg.names() if n not in refs]
+    if not refs:
+        print(
+            "cuthermo profile: nothing to do "
+            "(pass --kernel NAME[:VARIANT] or --all)",
+            file=sys.stderr,
+        )
+        return 2
+    override = _parse_sampler(args.sampler)
+    try:
+        resolved = [kreg.resolve(ref) for ref in refs]
+    except KeyError as e:
+        print(f"cuthermo: {e.args[0]}", file=sys.stderr)
+        return 2
+    # drop repeated refs ('-k gemm -k gemm', or 'gemm' + 'gemm:v00' which
+    # resolve identically), keeping first-occurrence order
+    uniq, seen_pairs = [], set()
+    for entry, variant in resolved:
+        if (entry.name, variant.name) not in seen_pairs:
+            seen_pairs.add((entry.name, variant.name))
+            uniq.append((entry, variant))
+    resolved = uniq
+    # kernel names are the iteration's alignment keys; when one invocation
+    # profiles several variants of the same kernel, qualify the names
+    entry_counts: dict = {}
+    for entry, _ in resolved:
+        entry_counts[entry.name] = entry_counts.get(entry.name, 0) + 1
+    try:
+        sess = ProfileSession(args.out)
+    except SessionError as e:
+        print(f"cuthermo: {e}", file=sys.stderr)
+        return 2
+    profiled = []
+    for entry, variant in resolved:
+        name = (
+            entry.name
+            if entry_counts[entry.name] == 1
+            else f"{entry.name}:{variant.name}"
+        )
+        pk = profile_kernel(
+            variant.spec(),
+            override or entry.sampler(),
+            variant.dynamic_context(),
+            name=name,
+            variant=variant.name,
+            region_map=entry.region_map,
+        )
+        profiled.append(pk)
+        if not args.quiet:
+            print(f"# {entry.name}:{variant.name}")
+            print(format_report(pk.heatmap))
+            print()
+    try:
+        it = sess.add_iteration(profiled, label=args.label, note=args.note)
+    except SessionError as e:
+        print(f"cuthermo: {e}", file=sys.stderr)
+        return 2
+    print(f"wrote {it.path} ({len(profiled)} kernels)")
+    return 0
+
+
+def _resolve_iteration_dir(path: str):
+    """Accept an iteration dir, or a session dir (use its last iteration)."""
+    import os
+
+    from repro.core.session import ProfileSession, SessionError, load_iteration
+
+    if os.path.isfile(os.path.join(path, "session.json")):
+        sess = ProfileSession(path, create=False)
+        names = sess.iteration_names()
+        if not names:
+            raise SessionError(f"{path}: session has no iterations yet")
+        return sess.iteration(-1)
+    return load_iteration(path)
+
+
+def _cmd_report(args: argparse.Namespace) -> int:
+    """Handler for ``cuthermo report``."""
+    import os
+
+    from repro.core.render import ReportEntry, write_report_bundle
+    from repro.core.session import SessionError
+
+    try:
+        it = _resolve_iteration_dir(args.iteration)
+    except SessionError as e:
+        print(f"cuthermo: {e}", file=sys.stderr)
+        return 2
+    entries = [ReportEntry.from_profiled(pk) for pk in it.kernels]
+    out = args.out or os.path.join(str(it.path), "report")
+    title = args.title or f"cuthermo report — {it.label}"
+    written = write_report_bundle(entries, out, title=title)
+    print(f"wrote {written['index.html']}")
+    print(f"wrote {written['report.md']}")
+    return 0
+
+
+def _cmd_diff(args: argparse.Namespace) -> int:
+    """Handler for ``cuthermo diff``."""
+    from repro.core.session import SessionError, diff_iterations, load_iteration
+
+    region_maps = {}
+    for spec in args.region_map:
+        try:
+            kernel, rename = spec.split(":", 1)
+            old, new = rename.split("=", 1)
+        except ValueError:
+            print(
+                f"cuthermo: bad --region-map {spec!r} "
+                "(expected KERNEL:OLD=NEW)",
+                file=sys.stderr,
+            )
+            return 2
+        region_maps.setdefault(kernel, {})[old] = new
+    try:
+        before = load_iteration(args.before)
+        after = load_iteration(args.after)
+    except SessionError as e:
+        print(f"cuthermo: {e}", file=sys.stderr)
+        return 2
+    sd = diff_iterations(before, after, region_maps=region_maps)
+    print(sd.summary())
+    if args.fail_on_regression and sd.regressed:
+        return 1
+    return 0
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    """Entry point for the ``cuthermo`` console script."""
+    parser = _build_parser()
+    args = parser.parse_args(argv)
+    if not getattr(args, "func", None):
+        parser.print_help()
+        return 2
+    return args.func(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -9,7 +9,7 @@ Public API lives in ``repro.core.api`` (also re-exported here).
 """
 
 from . import advisor, api, collector, diff as diff_mod, heatmap, hlo_cost
-from . import hlo_thermo, patterns, render, roofline, tiles, trace
+from . import hlo_thermo, patterns, render, roofline, session, tiles, trace
 from .diff import HeatmapDiff, diff
 from .api import (
     actions,
@@ -23,6 +23,7 @@ from .api import (
 from .collector import KernelSpec, OperandSpec, ScratchSpec, analyze, collect
 from .heatmap import Analyzer, Heatmap
 from .patterns import PatternReport
+from .session import Iteration, ProfileSession, SessionDiff, SessionError
 from .trace import GridSampler, KernelWhitelist, TraceBuffer
 
 __all__ = [
@@ -30,6 +31,10 @@ __all__ = [
     "GridSampler",
     "Heatmap",
     "HeatmapDiff",
+    "Iteration",
+    "ProfileSession",
+    "SessionDiff",
+    "SessionError",
     "diff",
     "hlo_cost",
     "KernelSpec",
@@ -55,6 +60,7 @@ __all__ = [
     "render",
     "report",
     "roofline",
+    "session",
     "tiles",
     "trace",
 ]

@@ -37,6 +37,17 @@ class Action:
     est_transaction_saving: float  # fraction of region transactions saved
     params: Tuple[Tuple[str, str], ...] = ()
 
+    def as_dict(self) -> dict:
+        """JSON-ready view (session manifests, report bundles)."""
+        return {
+            "kind": self.kind,
+            "region": self.region,
+            "pattern": self.pattern,
+            "description": self.description,
+            "est_transaction_saving": self.est_transaction_saving,
+            "params": {k: v for k, v in self.params},
+        }
+
 
 def _advise_one(rep: PatternReport, hm: Heatmap) -> Optional[Action]:
     region_tx = hm.sector_transactions(rep.region)

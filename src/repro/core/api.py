@@ -5,7 +5,9 @@
     print(thermo.report(spec))                     # patterns + advice
 
 plus ``profile_step`` for Level-3 (distributed HLO) profiling of whole
-jitted train/serve steps.
+jitted train/serve steps, and :class:`ProfileSession` (re-exported from
+:mod:`repro.core.session`) for the persistent multi-kernel tuning loop
+behind the ``cuthermo`` CLI.
 """
 
 from __future__ import annotations
@@ -20,6 +22,7 @@ from .collector import KernelSpec, analyze, collect
 from .heatmap import Heatmap
 from .patterns import PatternReport, detect_all, patterns_by_region
 from .render import render_ascii, render_csv, render_html, save
+from .session import Iteration, ProfileSession, SessionDiff, SessionError
 from .trace import GridSampler, KernelWhitelist
 
 
@@ -28,6 +31,13 @@ def heatmap(
     sampler: Optional[GridSampler] = None,
     dynamic_context: Optional[Dict[str, np.ndarray]] = None,
 ) -> Heatmap:
+    """Profile one kernel spec and return its word/sector heat map.
+
+    Runs the Level-1 BlockSpec walk (plus any Level-2 dynamic access
+    models in the spec, fed from ``dynamic_context`` arrays) over the
+    sampled grid and flushes the analyzer — collect + ingest + flush in
+    one call.
+    """
     return analyze(spec, sampler=sampler, dynamic_context=dynamic_context)
 
 
@@ -36,6 +46,7 @@ def patterns(
     sampler: Optional[GridSampler] = None,
     dynamic_context: Optional[Dict[str, np.ndarray]] = None,
 ) -> List[PatternReport]:
+    """Profile ``spec`` and return its detected inefficiency patterns."""
     return detect_all(heatmap(spec, sampler, dynamic_context))
 
 
@@ -44,6 +55,7 @@ def actions(
     sampler: Optional[GridSampler] = None,
     dynamic_context: Optional[Dict[str, np.ndarray]] = None,
 ) -> List[Action]:
+    """Profile ``spec`` and return the advisor's suggested optimizations."""
     return advise(heatmap(spec, sampler, dynamic_context))
 
 
@@ -52,6 +64,7 @@ def report(
     sampler: Optional[GridSampler] = None,
     dynamic_context: Optional[Dict[str, np.ndarray]] = None,
 ) -> str:
+    """Profile ``spec`` and return the human-readable tuning report."""
     return format_report(heatmap(spec, sampler, dynamic_context))
 
 
@@ -59,9 +72,13 @@ __all__ = [
     "Action",
     "GridSampler",
     "Heatmap",
+    "Iteration",
     "KernelSpec",
     "KernelWhitelist",
     "PatternReport",
+    "ProfileSession",
+    "SessionDiff",
+    "SessionError",
     "actions",
     "advise",
     "analyze",

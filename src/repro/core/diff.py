@@ -46,6 +46,22 @@ class HeatmapDiff:
         """Modeled transaction speedup (the Table III currency)."""
         return self.tx_before / max(self.tx_after, 1)
 
+    @property
+    def verdict(self) -> str:
+        """Tuning-loop verdict: 'improved' | 'regressed' | 'unchanged'.
+
+        A change is a regression when it moves more data across the
+        HBM<->VMEM boundary OR introduces a new inefficiency pattern
+        without reducing traffic (even if another pattern was fixed in
+        trade) — the two signals a tuning iteration reviews before
+        keeping a change.
+        """
+        if self.tx_after < self.tx_before:
+            return "improved"
+        if self.tx_after > self.tx_before or self.introduced:
+            return "regressed"
+        return "unchanged"
+
     def summary(self) -> str:
         lines = [
             f"== thermo diff: {self.kernel_before} -> {self.kernel_after} ==",

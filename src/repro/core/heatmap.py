@@ -274,6 +274,33 @@ class Heatmap:
         )
         return moved / demanded
 
+    def summary_stats(self) -> Dict[str, object]:
+        """JSON-ready profile summary (session manifests, report digests).
+
+        Everything here is derived from the columnar temperature state:
+        the modeled transaction totals plus per-region sector/program
+        counts — the numbers a dashboard wants without loading arrays.
+        """
+        return {
+            "kernel": self.kernel,
+            "grid": list(self.grid),
+            "sampler": self.sampler,
+            "n_records": self.n_records,
+            "dropped": self.dropped,
+            "transactions": self.sector_transactions(),
+            "demanded_words": self.useful_word_transactions(),
+            "waste_ratio": self.waste_ratio(),
+            "regions": {
+                rh.region.name: {
+                    "space": rh.region.space,
+                    "touched_sectors": rh.touched_sectors,
+                    "n_programs": rh.n_programs,
+                    "max_sector_temp": rh.max_sector_temp,
+                }
+                for rh in self.regions
+            },
+        }
+
 
 @dataclasses.dataclass
 class _IngestedChunk:

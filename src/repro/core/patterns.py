@@ -58,6 +58,17 @@ class PatternReport:
                 return v
         return default
 
+    def as_dict(self) -> Dict[str, object]:
+        """JSON-ready view (evidence rows elided to the text strings)."""
+        return {
+            "pattern": self.pattern,
+            "region": self.region,
+            "kernel": self.kernel,
+            "severity": self.severity,
+            "evidence": list(self.evidence),
+            "details": {k: v for k, v in self.details},
+        }
+
 
 def _mean(xs: Sequence[float]) -> float:
     return sum(xs) / len(xs) if xs else 0.0

@@ -1,0 +1,733 @@
+"""Persistent profiling sessions: the paper's tuning loop as an artifact.
+
+CUTHERMO's workflow (Fig. 2) is iterative — profile, read the heat map,
+optimize, re-profile — and its headline results (up to 721.79% speedup)
+come from *sequences* of such iterations.  This module makes that loop a
+first-class, on-disk object:
+
+* ``ProfileSession`` owns a session directory and appends numbered
+  *iterations* (``iter0``, ``iter1``, ...).  One iteration profiles any
+  number of kernels (``KernelSpec``s) and persists, per kernel, the full
+  columnar heat map plus the derived pattern reports and advisor actions.
+* The artifact format is versioned: each iteration directory holds one
+  ``manifest.json`` (metadata, patterns, actions — readable without
+  numpy) and one ``<kernel>.npz`` per kernel (the exact ``int64``
+  temperature arrays).  Reloading reproduces bit-identical temperatures;
+  loading a manifest stamped with an unknown version fails loudly.
+* ``ProfileSession.diff`` aligns two iterations kernel-by-kernel through
+  :mod:`repro.core.diff` and emits per-kernel verdicts (improved /
+  regressed / unchanged / added / removed) — the artifact a tuning
+  iteration reviews before the next change.
+
+Layout on disk (see ``docs/file-format.md``)::
+
+    sess/
+      session.json          # {"format": "cuthermo-session", "version": 1,
+                            #  "iterations": ["iter0", "iter1"]}
+      iter0/
+        manifest.json       # version stamp + per-kernel metadata
+        gemm.npz            # r{i}_tags / r{i}_word_temps / r{i}_sector_temps
+      iter1/ ...
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+import time
+from pathlib import Path
+from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from .advisor import Action, advise
+from .collector import KernelSpec, analyze
+from .diff import HeatmapDiff, diff as diff_heatmaps
+from .heatmap import Heatmap, RegionHeatmap
+from .patterns import PatternReport, detect_all
+from .render import dedupe_stem, slugify
+from .tiles import TileGeometry
+from .trace import GridSampler, RegionInfo
+
+#: Version stamp written into every manifest.  Bump on any change to the
+#: npz key layout or the manifest schema; loaders reject other versions.
+ARTIFACT_VERSION = 1
+
+SESSION_FORMAT = "cuthermo-session"
+ITERATION_FORMAT = "cuthermo-iteration"
+
+
+class SessionError(RuntimeError):
+    """Raised for malformed, missing, or version-incompatible artifacts."""
+
+
+# ---------------------------------------------------------------------------
+# heat-map (de)serialization
+# ---------------------------------------------------------------------------
+
+
+def heatmap_to_arrays(hm: Heatmap) -> Tuple[dict, Dict[str, np.ndarray]]:
+    """Split a Heatmap into (JSON-ready metadata, named int64 arrays).
+
+    The arrays carry the exact columnar state of every region
+    (``r{i}_tags``, ``r{i}_word_temps``, ``r{i}_sector_temps``); the
+    metadata dict carries everything needed to rebuild ``RegionInfo``
+    geometry.  ``arrays_to_heatmap`` inverts this losslessly.
+    """
+    meta = {
+        "kernel": hm.kernel,
+        "grid": list(hm.grid),
+        "sampler": hm.sampler,
+        "n_records": hm.n_records,
+        "dropped": hm.dropped,
+        "regions": [],
+    }
+    arrays: Dict[str, np.ndarray] = {}
+    for i, rh in enumerate(hm.regions):
+        geom = rh.region.geometry
+        meta["regions"].append(
+            {
+                "name": rh.region.name,
+                "space": rh.region.space,
+                "shape": list(geom.shape),
+                "itemsize": geom.itemsize,
+                "n_programs": rh.n_programs,
+            }
+        )
+        arrays[f"r{i}_tags"] = rh.tags_array
+        arrays[f"r{i}_word_temps"] = rh.word_temps_matrix
+        arrays[f"r{i}_sector_temps"] = rh.sector_temps_array
+    return meta, arrays
+
+
+def arrays_to_heatmap(meta: Mapping, arrays: Mapping[str, np.ndarray]) -> Heatmap:
+    """Rebuild a Heatmap from ``heatmap_to_arrays`` output (exact inverse)."""
+    regions: List[RegionHeatmap] = []
+    for i, rmeta in enumerate(meta["regions"]):
+        geom = TileGeometry(
+            shape=tuple(int(s) for s in rmeta["shape"]),
+            itemsize=int(rmeta["itemsize"]),
+            name=rmeta["name"],
+        )
+        info = RegionInfo(rmeta["name"], geom, space=rmeta["space"])
+        regions.append(
+            RegionHeatmap(
+                region=info,
+                n_programs=int(rmeta["n_programs"]),
+                tags=np.asarray(arrays[f"r{i}_tags"], dtype=np.int64),
+                word_temps=np.asarray(
+                    arrays[f"r{i}_word_temps"], dtype=np.int64
+                ),
+                sector_temps=np.asarray(
+                    arrays[f"r{i}_sector_temps"], dtype=np.int64
+                ),
+            )
+        )
+    return Heatmap(
+        kernel=meta["kernel"],
+        grid=tuple(int(g) for g in meta["grid"]),
+        sampler=meta["sampler"],
+        regions=tuple(regions),
+        n_records=int(meta["n_records"]),
+        dropped=int(meta["dropped"]),
+    )
+
+
+def heatmaps_equal(a: Heatmap, b: Heatmap) -> bool:
+    """True when two heat maps carry bit-identical temperature state."""
+    if (
+        a.kernel != b.kernel
+        or a.grid != b.grid
+        or a.sampler != b.sampler
+        or a.n_records != b.n_records
+        or a.dropped != b.dropped
+        or a.region_names() != b.region_names()
+    ):
+        return False
+    for ra, rb in zip(a.regions, b.regions):
+        if (
+            ra.region != rb.region
+            or ra.n_programs != rb.n_programs
+            or not np.array_equal(ra.tags_array, rb.tags_array)
+            or not np.array_equal(ra.word_temps_matrix, rb.word_temps_matrix)
+            or not np.array_equal(
+                ra.sector_temps_array, rb.sector_temps_array
+            )
+        ):
+            return False
+    return True
+
+
+# ---------------------------------------------------------------------------
+# iteration records
+# ---------------------------------------------------------------------------
+
+
+def profile_kernel(
+    spec: KernelSpec,
+    sampler: Optional[GridSampler] = None,
+    dynamic_context: Optional[Mapping[str, np.ndarray]] = None,
+    *,
+    name: Optional[str] = None,
+    variant: Optional[str] = None,
+    region_map: Sequence[Tuple[str, str]] = (),
+) -> "ProfiledKernel":
+    """Profile one spec into a ProfiledKernel (the single assembly point).
+
+    Runs collect+analyze under the given sampler (full-grid by default,
+    see :meth:`ProfileSession.profile`), derives patterns and actions,
+    and stamps the wall time.  ``name`` defaults to the spec's own name;
+    every profiling entry point (session, CLI, examples) goes through
+    here so the derivation never diverges.
+    """
+    sampler = sampler or GridSampler(None)
+    t0 = time.perf_counter()
+    hm = analyze(spec, sampler=sampler, dynamic_context=dynamic_context)
+    wall = time.perf_counter() - t0
+    return ProfiledKernel(
+        name=name or spec.name,
+        variant=variant or spec.name,
+        heatmap=hm,
+        reports=tuple(detect_all(hm)),
+        actions=tuple(advise(hm)),
+        wall_s=wall,
+        region_map=tuple(region_map),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class ProfiledKernel:
+    """One kernel's results inside an iteration (heat map + derived views)."""
+
+    name: str  # registry/display name (manifest key, unique per iteration)
+    variant: str
+    heatmap: Heatmap
+    reports: Tuple[PatternReport, ...]
+    actions: Tuple[Action, ...]
+    wall_s: float = 0.0
+    # known region renames an optimization of this kernel performs
+    # (e.g. q -> qT); persisted so later diffs align automatically
+    region_map: Tuple[Tuple[str, str], ...] = ()
+
+    @property
+    def transactions(self) -> int:
+        """Modeled HBM<->VMEM tile transfers of this kernel's heat map."""
+        return self.heatmap.sector_transactions()
+
+    @property
+    def waste_ratio(self) -> float:
+        """Moved/demanded words of this kernel's heat map (1.0 = perfect)."""
+        return self.heatmap.waste_ratio()
+
+
+@dataclasses.dataclass(frozen=True)
+class Iteration:
+    """One loaded tuning iteration: a label plus its profiled kernels."""
+
+    path: Path
+    label: str
+    created: float
+    kernels: Tuple[ProfiledKernel, ...]
+    note: str = ""
+
+    def kernel(self, name: str) -> ProfiledKernel:
+        """Look up one profiled kernel by manifest name."""
+        for pk in self.kernels:
+            if pk.name == name:
+                return pk
+        raise KeyError(name)
+
+    def kernel_names(self) -> List[str]:
+        """Manifest names of every kernel profiled in this iteration."""
+        return [pk.name for pk in self.kernels]
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelVerdict:
+    """Per-kernel outcome of diffing two iterations."""
+
+    kernel: str
+    verdict: str  # 'improved' | 'regressed' | 'unchanged' | 'added' | 'removed'
+    diff: Optional[HeatmapDiff] = None
+
+    @property
+    def speedup_estimate(self) -> float:
+        """Modeled transaction speedup (1.0 when not comparable)."""
+        return self.diff.speedup_estimate if self.diff else 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class SessionDiff:
+    """Kernel-aligned diff of two iterations."""
+
+    before_label: str
+    after_label: str
+    verdicts: Tuple[KernelVerdict, ...]
+
+    @property
+    def regressed(self) -> Tuple[KernelVerdict, ...]:
+        """Verdicts whose kernels regressed between the two iterations."""
+        return tuple(v for v in self.verdicts if v.verdict == "regressed")
+
+    @property
+    def improved(self) -> Tuple[KernelVerdict, ...]:
+        """Verdicts whose kernels improved between the two iterations."""
+        return tuple(v for v in self.verdicts if v.verdict == "improved")
+
+    def summary(self) -> str:
+        """Multi-line human-readable summary (the ``cuthermo diff`` body)."""
+        lines = [
+            f"== session diff: {self.before_label} -> {self.after_label} =="
+        ]
+        for v in self.verdicts:
+            if v.diff is None:
+                lines.append(f"[{v.verdict:>9}] {v.kernel}")
+                continue
+            d = v.diff
+            lines.append(
+                f"[{v.verdict:>9}] {v.kernel}: transfers "
+                f"{d.tx_before} -> {d.tx_after} ({d.speedup_estimate:.2f}x)"
+            )
+            for tag, items in (
+                ("fixed", d.fixed),
+                ("INTRODUCED", d.introduced),
+                ("persisting", d.persisting),
+            ):
+                for region, pattern in items:
+                    lines.append(f"      [{tag}] {pattern} on {region}")
+        n_imp, n_reg = len(self.improved), len(self.regressed)
+        lines.append(
+            f"{len(self.verdicts)} kernels compared: "
+            f"{n_imp} improved, {n_reg} regressed"
+        )
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# on-disk writers / readers
+# ---------------------------------------------------------------------------
+
+
+def _check_version(manifest: Mapping, path: Path) -> None:
+    version = manifest.get("version")
+    if version != ARTIFACT_VERSION:
+        raise SessionError(
+            f"{path}: unsupported artifact version {version!r}; this build "
+            f"reads version {ARTIFACT_VERSION}.  Re-profile with this "
+            "version of cuthermo (or load with the version that wrote it)."
+        )
+
+
+def write_iteration(
+    path: Union[str, Path],
+    kernels: Sequence[ProfiledKernel],
+    label: Optional[str] = None,
+    note: str = "",
+) -> Path:
+    """Persist one iteration (manifest.json + one npz per kernel).
+
+    ``path`` is created (parents included); an existing manifest there is
+    overwritten — iterations are append-only at the *session* level, but
+    re-profiling into the same directory is allowed and replaces it.
+
+    Kernel names must be unique within an iteration (they are the
+    alignment keys of ``Iteration.kernel`` and cross-iteration diffs);
+    duplicates raise :class:`SessionError` instead of silently shadowing
+    each other.
+    """
+    path = Path(path)
+    names_seen = [pk.name for pk in kernels]
+    dupes = sorted({n for n in names_seen if names_seen.count(n) > 1})
+    if dupes:
+        raise SessionError(
+            f"duplicate kernel name(s) {dupes} in one iteration; kernel "
+            "names are alignment keys and must be unique (disambiguate "
+            "with e.g. 'gemm:v00' / 'gemm:v01')"
+        )
+    path.mkdir(parents=True, exist_ok=True)
+    label = label or path.name
+    entries = []
+    seen: Dict[str, int] = {}
+    for pk in kernels:
+        stem = dedupe_stem(slugify(pk.name), seen)
+        meta, arrays = heatmap_to_arrays(pk.heatmap)
+        npz_name = f"{stem}.npz"
+        with open(path / npz_name, "wb") as f:
+            np.savez_compressed(f, **arrays)
+        entries.append(
+            {
+                "name": pk.name,
+                "variant": pk.variant,
+                "npz": npz_name,
+                "wall_s": pk.wall_s,
+                "transactions": pk.transactions,
+                "waste_ratio": pk.waste_ratio,
+                "heatmap": meta,
+                "region_map": {old: new for old, new in pk.region_map},
+                # derived views, stored for numpy-free consumers; loaders
+                # recompute them from the arrays (single source of truth)
+                "patterns": [r.as_dict() for r in pk.reports],
+                "actions": [a.as_dict() for a in pk.actions],
+            }
+        )
+    manifest = {
+        "format": ITERATION_FORMAT,
+        "version": ARTIFACT_VERSION,
+        "label": label,
+        "note": note,
+        "created": time.time(),
+        "kernels": entries,
+    }
+    with open(path / "manifest.json", "w") as f:
+        json.dump(manifest, f, indent=2)
+    return path
+
+
+def load_iteration(path: Union[str, Path]) -> Iteration:
+    """Load one iteration directory back into memory.
+
+    Raises :class:`SessionError` when the directory has no manifest or the
+    manifest's version stamp is not :data:`ARTIFACT_VERSION`.  Pattern
+    reports and advisor actions are *recomputed* from the reloaded arrays
+    (they are pure functions of the heat map), which doubles as an
+    integrity check: a corrupted npz cannot silently keep stale verdicts.
+    """
+    path = Path(path)
+    mpath = path / "manifest.json"
+    if not mpath.is_file():
+        raise SessionError(
+            f"{path}: not an iteration directory (no manifest.json)"
+        )
+    try:
+        with open(mpath) as f:
+            manifest = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise SessionError(f"{mpath}: unreadable manifest ({e})") from e
+    if manifest.get("format") not in (None, ITERATION_FORMAT):
+        raise SessionError(
+            f"{mpath}: format {manifest.get('format')!r} is not "
+            f"{ITERATION_FORMAT!r}"
+        )
+    _check_version(manifest, mpath)
+    kernels: List[ProfiledKernel] = []
+    for entry in manifest.get("kernels", []):
+        npz_path = path / entry["npz"]
+        if not npz_path.is_file():
+            raise SessionError(f"{npz_path}: referenced by manifest, missing")
+        try:
+            with np.load(npz_path) as data:
+                hm = arrays_to_heatmap(entry["heatmap"], data)
+        except SessionError:
+            raise
+        except Exception as e:  # corrupt npz / missing keys / bad metadata
+            raise SessionError(
+                f"{npz_path}: corrupt or inconsistent artifact ({e})"
+            ) from e
+        kernels.append(
+            ProfiledKernel(
+                name=entry["name"],
+                variant=entry.get("variant", ""),
+                heatmap=hm,
+                reports=tuple(detect_all(hm)),
+                actions=tuple(advise(hm)),
+                wall_s=float(entry.get("wall_s", 0.0)),
+                region_map=tuple(
+                    sorted(entry.get("region_map", {}).items())
+                ),
+            )
+        )
+    return Iteration(
+        path=path,
+        label=manifest.get("label", path.name),
+        created=float(manifest.get("created", 0.0)),
+        kernels=tuple(kernels),
+        note=manifest.get("note", ""),
+    )
+
+
+def _effective_region_map(
+    rename: Mapping[str, str], before_hm: Heatmap, after_hm: Heatmap
+) -> Dict[str, str]:
+    """Keep only renames that actually apply to this pair of heat maps.
+
+    A stored rename like ``q -> qT`` must be a no-op when diffing two
+    un-renamed profiles (both sides still have ``q``) or two already-
+    renamed ones (both have ``qT``): applying it blindly would orphan
+    regions or mislabel patterns.  A rename is live only when the before
+    side has the old name and the after side has the new name but not
+    the old one.
+    """
+    before = set(before_hm.region_names())
+    after = set(after_hm.region_names())
+    return {
+        old: new
+        for old, new in rename.items()
+        if old in before and new in after and old not in after
+    }
+
+
+def diff_iterations(
+    before: Iteration,
+    after: Iteration,
+    region_maps: Optional[Mapping[str, Mapping[str, str]]] = None,
+) -> SessionDiff:
+    """Align two iterations kernel-by-kernel and attach verdicts.
+
+    Kernels are matched by manifest name; region renames (an optimization
+    often renames buffers, e.g. ``q`` -> ``qT``) come from each before-
+    kernel's persisted ``region_map``, overridable per kernel through the
+    ``region_maps`` argument, and are applied only where the after side
+    actually carries the renamed region.  Kernels present on only one
+    side get 'added' / 'removed' verdicts instead of a heat-map diff.
+    """
+    region_maps = region_maps or {}
+    verdicts: List[KernelVerdict] = []
+    after_names = set(after.kernel_names())
+    for pk in before.kernels:
+        if pk.name not in after_names:
+            verdicts.append(KernelVerdict(kernel=pk.name, verdict="removed"))
+            continue
+        after_pk = after.kernel(pk.name)
+        rename = region_maps.get(pk.name)
+        if rename is None:
+            rename = dict(pk.region_map)
+        d = diff_heatmaps(
+            pk.heatmap,
+            after_pk.heatmap,
+            region_map=_effective_region_map(
+                rename, pk.heatmap, after_pk.heatmap
+            ),
+        )
+        verdicts.append(
+            KernelVerdict(kernel=pk.name, verdict=d.verdict, diff=d)
+        )
+    before_names = set(before.kernel_names())
+    for pk in after.kernels:
+        if pk.name not in before_names:
+            verdicts.append(KernelVerdict(kernel=pk.name, verdict="added"))
+    return SessionDiff(
+        before_label=before.label,
+        after_label=after.label,
+        verdicts=tuple(verdicts),
+    )
+
+
+# ---------------------------------------------------------------------------
+# the session object
+# ---------------------------------------------------------------------------
+
+_ITER_RE = re.compile(r"^iter(\d+)$")
+
+
+class ProfileSession:
+    """A directory of numbered tuning iterations (the paper's Fig. 2 loop).
+
+    Typical use::
+
+        sess = ProfileSession("sess/")
+        sess.profile([gemm_v00_spec(1024, 1024, 1024)])   # -> sess/iter0
+        # ... optimize the kernel ...
+        sess.profile([gemm_v01_spec(1024, 1024, 1024)],
+                     names={"gemm_v01": "gemm_v00"})      # -> sess/iter1
+        print(sess.diff(0, 1).summary())
+
+    Iterations are append-only: each ``profile`` call creates the next
+    ``iterN`` directory.  Everything is reloadable by any later process
+    (and by the ``cuthermo`` CLI) from the directory alone.
+    """
+
+    def __init__(self, root: Union[str, Path], create: bool = True):
+        """Open (and by default create) the session at ``root``."""
+        self.root = Path(root)
+        spath = self.root / "session.json"
+        if spath.is_file():
+            try:
+                with open(spath) as f:
+                    manifest = json.load(f)
+            except (OSError, json.JSONDecodeError) as e:
+                raise SessionError(
+                    f"{spath}: unreadable session manifest ({e})"
+                ) from e
+            if manifest.get("format") != SESSION_FORMAT:
+                raise SessionError(
+                    f"{spath}: format {manifest.get('format')!r} is not "
+                    f"{SESSION_FORMAT!r}"
+                )
+            _check_version(manifest, spath)
+        elif create:
+            self.root.mkdir(parents=True, exist_ok=True)
+            self._write_session_manifest([])
+        else:
+            raise SessionError(f"{self.root}: no session.json (create=False)")
+
+    # -- manifest ----------------------------------------------------------
+    def _write_session_manifest(self, iterations: List[str]) -> None:
+        with open(self.root / "session.json", "w") as f:
+            json.dump(
+                {
+                    "format": SESSION_FORMAT,
+                    "version": ARTIFACT_VERSION,
+                    "iterations": iterations,
+                },
+                f,
+                indent=2,
+            )
+
+    def iteration_names(self) -> List[str]:
+        """Names of this session's iterations, ordered by iteration number."""
+        spath = self.root / "session.json"
+        try:
+            with open(spath) as f:
+                manifest = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            raise SessionError(
+                f"{spath}: unreadable session manifest ({e})"
+            ) from e
+        _check_version(manifest, spath)
+        names = set(manifest.get("iterations", []))
+        # pick up directories written by other processes since last update
+        names.update(
+            d.name
+            for d in self.root.iterdir()
+            if d.is_dir() and _ITER_RE.match(d.name)
+            and (d / "manifest.json").is_file()
+        )
+        # numeric order == creation order (add_iteration claims ascending
+        # iterN slots), regardless of which writer updated the manifest last
+        return sorted(
+            names,
+            key=lambda n: (
+                int(_ITER_RE.match(n).group(1)) if _ITER_RE.match(n) else -1,
+                n,
+            ),
+        )
+
+    # -- profiling ---------------------------------------------------------
+    def profile(
+        self,
+        specs: Iterable[KernelSpec],
+        sampler: Optional[GridSampler] = None,
+        dynamic_contexts: Optional[Mapping[str, Mapping[str, np.ndarray]]] = None,
+        names: Optional[Mapping[str, str]] = None,
+        variants: Optional[Mapping[str, str]] = None,
+        region_maps: Optional[Mapping[str, Mapping[str, str]]] = None,
+        label: Optional[str] = None,
+        note: str = "",
+    ) -> Iteration:
+        """Profile every spec and persist the results as the next iteration.
+
+        ``names`` maps a spec's own name to the manifest name used for
+        cross-iteration alignment (so ``gemm_v01`` in iter1 can diff
+        against ``gemm_v00`` in iter0 under the shared name ``gemm``);
+        ``dynamic_contexts``, ``variants`` and ``region_maps`` are keyed
+        the same way, by ``KernelSpec.name``.  Returns the loaded
+        :class:`Iteration`.
+
+        The default sampler is FULL-GRID (unlike ``api.heatmap``'s
+        block-sampling default): iteration diffs compare absolute
+        transfer totals, which only align when both sides cover the
+        whole problem.  Pass an explicit window sampler to trade
+        coverage for speed on very large grids.
+        """
+        sampler = sampler or GridSampler(None)
+        dynamic_contexts = dynamic_contexts or {}
+        names = names or {}
+        variants = variants or {}
+        region_maps = region_maps or {}
+        profiled = [
+            profile_kernel(
+                spec,
+                sampler,
+                dynamic_contexts.get(spec.name),
+                name=names.get(spec.name),
+                variant=variants.get(spec.name),
+                region_map=sorted(region_maps.get(spec.name, {}).items()),
+            )
+            for spec in specs
+        ]
+        return self.add_iteration(profiled, label=label, note=note)
+
+    def add_iteration(
+        self,
+        kernels: Sequence[ProfiledKernel],
+        label: Optional[str] = None,
+        note: str = "",
+    ) -> Iteration:
+        """Persist already-profiled kernels as the next ``iterN`` directory.
+
+        The directory is claimed with an *exclusive* mkdir, so two
+        processes profiling into the same session race to distinct
+        ``iterN`` numbers instead of silently overwriting each other.
+        """
+        existing = self.iteration_names()
+        nums = [int(_ITER_RE.match(n).group(1)) for n in existing
+                if _ITER_RE.match(n)]
+        n = max(nums) + 1 if nums else 0
+        while True:
+            name = f"iter{n}"
+            try:
+                (self.root / name).mkdir(parents=True, exist_ok=False)
+                break
+            except FileExistsError:
+                n += 1  # another writer claimed it; take the next slot
+        path = write_iteration(
+            self.root / name, kernels, label=label or name, note=note
+        )
+        if name not in existing:
+            existing.append(name)
+        self._write_session_manifest(existing)
+        return load_iteration(path)
+
+    # -- access ------------------------------------------------------------
+    def iterations(self) -> List[Iteration]:
+        """Load every iteration of this session, in creation order."""
+        return [self.iteration(n) for n in self.iteration_names()]
+
+    def iteration(self, which: Union[int, str]) -> Iteration:
+        """Load one iteration by index (0, -1, ...) or directory name."""
+        names = self.iteration_names()
+        if isinstance(which, int):
+            try:
+                which = names[which]
+            except IndexError:
+                raise SessionError(
+                    f"session has {len(names)} iterations, asked for "
+                    f"index {which}"
+                ) from None
+        if which not in names:
+            raise SessionError(
+                f"{self.root}: no iteration {which!r} (have {names})"
+            )
+        return load_iteration(self.root / which)
+
+    def diff(
+        self,
+        before: Union[int, str, Iteration],
+        after: Union[int, str, Iteration],
+        region_maps: Optional[Mapping[str, Mapping[str, str]]] = None,
+    ) -> SessionDiff:
+        """Diff two iterations of this session (see :func:`diff_iterations`)."""
+        if not isinstance(before, Iteration):
+            before = self.iteration(before)
+        if not isinstance(after, Iteration):
+            after = self.iteration(after)
+        return diff_iterations(before, after, region_maps=region_maps)
+
+
+__all__ = [
+    "ARTIFACT_VERSION",
+    "Iteration",
+    "KernelVerdict",
+    "ProfileSession",
+    "ProfiledKernel",
+    "SessionDiff",
+    "SessionError",
+    "arrays_to_heatmap",
+    "diff_iterations",
+    "heatmap_to_arrays",
+    "heatmaps_equal",
+    "load_iteration",
+    "profile_kernel",
+    "write_iteration",
+]

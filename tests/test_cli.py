@@ -1,0 +1,178 @@
+"""cuthermo CLI: --help via subprocess, subcommand flows in-process."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro import cli
+
+REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run_cli(*args):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (
+        os.path.abspath(REPO_SRC)
+        + os.pathsep
+        + env.get("PYTHONPATH", "")
+    )
+    return subprocess.run(
+        [sys.executable, "-m", "repro.cli", *args],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=120,
+    )
+
+
+# -- subprocess: the console entry point actually runs ----------------------
+
+
+def test_help_subprocess():
+    proc = _run_cli("--help")
+    assert proc.returncode == 0
+    out = proc.stdout
+    for sub in ("profile", "report", "diff", "kernels"):
+        assert sub in out
+
+
+@pytest.mark.parametrize("sub", ["profile", "report", "diff", "kernels"])
+def test_subcommand_help_subprocess(sub):
+    proc = _run_cli(sub, "--help")
+    assert proc.returncode == 0
+    assert "usage" in proc.stdout.lower()
+
+
+def test_no_command_prints_help():
+    proc = _run_cli()
+    assert proc.returncode == 2
+
+
+# -- in-process: profile -> diff -> report ----------------------------------
+
+
+def test_profile_diff_report_flow(tmp_path, capsys):
+    sess = str(tmp_path / "sess")
+    assert cli.main(["profile", "--kernel", "gemm", "--out", sess,
+                     "--quiet"]) == 0
+    assert cli.main(["profile", "--kernel", "gemm:v01", "--out", sess,
+                     "--quiet"]) == 0
+    capsys.readouterr()
+
+    assert cli.main(["diff", os.path.join(sess, "iter0"),
+                     os.path.join(sess, "iter1")]) == 0
+    out = capsys.readouterr().out
+    assert "improved" in out and "gemm" in out
+    assert "false-sharing" in out
+
+    # regression gating: the reversed diff fails with --fail-on-regression
+    assert cli.main(["diff", os.path.join(sess, "iter1"),
+                     os.path.join(sess, "iter0"),
+                     "--fail-on-regression"]) == 1
+
+    assert cli.main(["report", os.path.join(sess, "iter1")]) == 0
+    report_dir = tmp_path / "sess" / "iter1" / "report"
+    index = report_dir / "index.html"
+    assert index.is_file() and (report_dir / "report.md").is_file()
+    html = index.read_text()
+    assert "gemm" in html and "<table>" in html
+
+    # report on the session root uses the latest iteration
+    assert cli.main(["report", sess, "--out", str(tmp_path / "r2")]) == 0
+    assert (tmp_path / "r2" / "index.html").is_file()
+
+
+def test_profile_writes_versioned_artifacts(tmp_path):
+    from repro.core.session import ARTIFACT_VERSION, load_iteration
+
+    sess = str(tmp_path / "sess")
+    assert cli.main(["profile", "--kernel", "ttm", "--out", sess,
+                     "--quiet", "--label", "baseline"]) == 0
+    it = load_iteration(os.path.join(sess, "iter0"))
+    assert it.label == "baseline"
+    assert it.kernel("ttm").variant == "scratch"
+    import json
+
+    manifest = json.loads(
+        (tmp_path / "sess" / "iter0" / "manifest.json").read_text()
+    )
+    assert manifest["version"] == ARTIFACT_VERSION
+
+
+def test_region_map_automatic_from_registry(tmp_path, capsys):
+    # the registry knows gramschm's optimization renames q -> qT; the
+    # stored rename makes the diff align without any --region-map flag
+    sess = str(tmp_path / "sess")
+    assert cli.main(["profile", "--kernel", "gramschm", "--out", sess,
+                     "--quiet"]) == 0
+    assert cli.main(["profile", "--kernel", "gramschm:opt", "--out", sess,
+                     "--quiet"]) == 0
+    capsys.readouterr()
+    assert cli.main(["diff", os.path.join(sess, "iter0"),
+                     os.path.join(sess, "iter1")]) == 0
+    out = capsys.readouterr().out
+    assert "strided" in out and "fixed" in out
+
+    # the explicit flag still works as an override
+    assert cli.main(["diff", os.path.join(sess, "iter0"),
+                     os.path.join(sess, "iter1"),
+                     "--region-map", "gramschm:q=qT"]) == 0
+    assert "strided" in capsys.readouterr().out
+
+    # self-diff of either side: the stored rename must be a no-op
+    capsys.readouterr()
+    assert cli.main(["diff", os.path.join(sess, "iter0"),
+                     os.path.join(sess, "iter0")]) == 0
+    assert "unchanged" in capsys.readouterr().out
+    assert cli.main(["diff", os.path.join(sess, "iter1"),
+                     os.path.join(sess, "iter1")]) == 0
+    assert "unchanged" in capsys.readouterr().out
+
+
+def test_unknown_kernel_fails(tmp_path, capsys):
+    rc = cli.main(["profile", "--kernel", "nope", "--out",
+                   str(tmp_path / "s"), "--quiet"])
+    assert rc == 2
+    assert "unknown kernel" in capsys.readouterr().err
+
+
+@pytest.mark.parametrize("spec", ["bogus", "window:abc", "window:", "window:0"])
+def test_bad_sampler_fails(tmp_path, spec):
+    with pytest.raises(SystemExit) as exc:
+        cli.main(["profile", "--kernel", "gemm", "--out",
+                  str(tmp_path / "s"), "--sampler", spec])
+    assert exc.value.code == 2  # usage error, not regression (exit 1)
+
+
+def test_two_variants_one_invocation_get_distinct_names(tmp_path):
+    from repro.core.session import load_iteration
+
+    sess = str(tmp_path / "sess")
+    assert cli.main(["profile", "--kernel", "ttm", "--kernel", "ttm:fused",
+                     "--out", sess, "--quiet"]) == 0
+    it = load_iteration(os.path.join(sess, "iter0"))
+    assert sorted(it.kernel_names()) == ["ttm:fused", "ttm:scratch"]
+    # both stay addressable (no silent shadowing)
+    assert it.kernel("ttm:fused").variant == "fused"
+
+
+def test_repeated_refs_deduped(tmp_path):
+    from repro.core.session import load_iteration
+
+    sess = str(tmp_path / "sess")
+    # 'ttm' and 'ttm:scratch' resolve identically; no crash, one kernel
+    assert cli.main(["profile", "--kernel", "ttm", "--kernel", "ttm",
+                     "--kernel", "ttm:scratch", "--out", sess,
+                     "--quiet"]) == 0
+    it = load_iteration(os.path.join(sess, "iter0"))
+    assert it.kernel_names() == ["ttm"]
+
+
+def test_kernels_lists_registry(capsys):
+    assert cli.main(["kernels"]) == 0
+    out = capsys.readouterr().out
+    for name in ("gemm", "spmv", "histogram", "gramschm"):
+        assert name in out
+    assert "v00" in out  # variants shown

@@ -35,3 +35,26 @@ def test_diff_identical_is_clean():
     d = diff(hm, hm2)
     assert d.fixed == () and d.introduced == ()
     assert abs(d.speedup_estimate - 1.0) < 1e-9
+
+
+def test_verdict_property():
+    from repro.core.diff import HeatmapDiff
+
+    def hd(tx_before, tx_after, fixed=(), introduced=()):
+        return HeatmapDiff(
+            kernel_before="a", kernel_after="b", regions=(),
+            fixed=tuple(fixed), introduced=tuple(introduced),
+            persisting=(), tx_before=tx_before, tx_after=tx_after,
+        )
+
+    assert hd(100, 50).verdict == "improved"
+    assert hd(100, 200).verdict == "regressed"
+    assert hd(100, 100).verdict == "unchanged"
+    # a new pattern without reduced traffic is a regression, even when
+    # another pattern was fixed in trade
+    assert hd(100, 100, introduced=[("r", "p2")]).verdict == "regressed"
+    assert hd(
+        100, 100, fixed=[("r", "p1")], introduced=[("r", "p2")]
+    ).verdict == "regressed"
+    # reduced traffic wins even with a new (milder) pattern
+    assert hd(100, 50, introduced=[("r", "p2")]).verdict == "improved"

@@ -1,0 +1,261 @@
+"""Session subsystem: save/load round-trip, iteration diffs, versioning."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.session import (
+    ARTIFACT_VERSION,
+    ProfiledKernel,
+    ProfileSession,
+    SessionError,
+    arrays_to_heatmap,
+    diff_iterations,
+    heatmap_to_arrays,
+    heatmaps_equal,
+    load_iteration,
+    write_iteration,
+)
+from repro.core.advisor import advise
+from repro.core.collector import analyze
+from repro.core.patterns import detect_all
+from repro.core.trace import GridSampler
+from repro.kernels.gemm import gemm_v00_spec, gemm_v01_spec
+
+FULL = GridSampler(None)
+
+
+def _heatmap(spec_fn=gemm_v00_spec, n=128):
+    return analyze(spec_fn(n, n, n), sampler=FULL)
+
+
+def _profiled(name="gemm", variant="v00", spec_fn=gemm_v00_spec, n=128):
+    hm = _heatmap(spec_fn, n)
+    return ProfiledKernel(
+        name=name,
+        variant=variant,
+        heatmap=hm,
+        reports=tuple(detect_all(hm)),
+        actions=tuple(advise(hm)),
+        wall_s=0.01,
+    )
+
+
+# -- arrays round trip ------------------------------------------------------
+
+
+def test_heatmap_arrays_roundtrip_exact():
+    hm = _heatmap()
+    meta, arrays = heatmap_to_arrays(hm)
+    back = arrays_to_heatmap(meta, arrays)
+    assert heatmaps_equal(hm, back)
+    # metadata survives too
+    assert back.kernel == hm.kernel
+    assert back.grid == hm.grid
+    assert back.sampler == hm.sampler
+
+
+def test_write_load_iteration_bit_identical(tmp_path):
+    pk = _profiled()
+    write_iteration(tmp_path / "iter0", [pk], label="golden")
+    it = load_iteration(tmp_path / "iter0")
+    assert it.label == "golden"
+    assert it.kernel_names() == ["gemm"]
+    re = it.kernel("gemm")
+    assert re.variant == "v00"
+    # golden: bit-identical temperatures after reload
+    for ra, rb in zip(pk.heatmap.regions, re.heatmap.regions):
+        assert ra.tags_array.dtype == rb.tags_array.dtype == np.int64
+        assert np.array_equal(ra.tags_array, rb.tags_array)
+        assert np.array_equal(ra.word_temps_matrix, rb.word_temps_matrix)
+        assert np.array_equal(ra.sector_temps_array, rb.sector_temps_array)
+    assert heatmaps_equal(pk.heatmap, re.heatmap)
+    # derived views are recomputed and agree with what was profiled
+    assert [r.pattern for r in re.reports] == [r.pattern for r in pk.reports]
+    assert [a.kind for a in re.actions] == [a.kind for a in pk.actions]
+
+
+def test_reloaded_diff_matches_in_memory_diff(tmp_path):
+    before, after = _profiled(), _profiled(variant="v01",
+                                           spec_fn=gemm_v01_spec)
+    write_iteration(tmp_path / "a", [before])
+    write_iteration(tmp_path / "b", [after])
+    from repro.core.diff import diff
+
+    mem = diff(before.heatmap, after.heatmap)
+    disk = diff(
+        load_iteration(tmp_path / "a").kernel("gemm").heatmap,
+        load_iteration(tmp_path / "b").kernel("gemm").heatmap,
+    )
+    assert disk.tx_before == mem.tx_before
+    assert disk.tx_after == mem.tx_after
+    assert disk.fixed == mem.fixed
+    assert disk.introduced == mem.introduced
+
+
+def test_summary_stats_json_ready(tmp_path):
+    import json as _json
+
+    hm = _heatmap()
+    stats = hm.summary_stats()
+    _json.dumps(stats)  # JSON-serializable end to end
+    assert stats["transactions"] == hm.sector_transactions()
+    assert stats["regions"]["C"]["n_programs"] == 128
+    assert stats["waste_ratio"] == hm.waste_ratio()
+
+
+# -- session object ---------------------------------------------------------
+
+
+def test_session_appends_numbered_iterations(tmp_path):
+    sess = ProfileSession(tmp_path / "sess")
+    sess.profile([gemm_v00_spec(128, 128, 128)])
+    sess.profile([gemm_v01_spec(128, 128, 128)])
+    assert sess.iteration_names() == ["iter0", "iter1"]
+    assert (tmp_path / "sess" / "session.json").is_file()
+    # reopen from disk: everything reloadable by a fresh process
+    sess2 = ProfileSession(tmp_path / "sess", create=False)
+    assert sess2.iteration_names() == ["iter0", "iter1"]
+    assert sess2.iteration(-1).kernel_names() == ["gemm_v01"]
+
+
+def test_session_diff_verdicts(tmp_path):
+    sess = ProfileSession(tmp_path / "sess")
+    naive = _profiled(variant="v00", spec_fn=gemm_v00_spec)
+    tiled = _profiled(variant="v01", spec_fn=gemm_v01_spec)
+    sess.add_iteration([naive])
+    sess.add_iteration([tiled])
+    sd = sess.diff(0, 1)
+    (v,) = sd.verdicts
+    assert v.verdict == "improved"
+    assert v.speedup_estimate > 1.0
+    assert ("C", "false-sharing") in v.diff.fixed
+    # reversed: a regression
+    rd = sess.diff(1, 0)
+    assert rd.verdicts[0].verdict == "regressed"
+    assert rd.regressed and not rd.improved
+    # self-diff: unchanged
+    sd0 = sess.diff(0, 0)
+    assert sd0.verdicts[0].verdict == "unchanged"
+    assert "improved" in sd.summary()
+
+
+def test_diff_added_removed_kernels(tmp_path):
+    a = write_iteration(tmp_path / "a", [_profiled(name="gemm")])
+    b = write_iteration(
+        tmp_path / "b", [_profiled(name="other", spec_fn=gemm_v01_spec)]
+    )
+    sd = diff_iterations(load_iteration(a), load_iteration(b))
+    verdicts = {v.kernel: v.verdict for v in sd.verdicts}
+    assert verdicts == {"gemm": "removed", "other": "added"}
+
+
+def test_diff_region_map_renames(tmp_path):
+    from repro.kernels.gramschm import k3_naive_spec, k3_opt_spec
+
+    before = ProfiledKernel(
+        name="gramschm", variant="naive",
+        heatmap=analyze(k3_naive_spec(512, 512, 512, k=3), sampler=FULL),
+        reports=(), actions=(),
+    )
+    after = ProfiledKernel(
+        name="gramschm", variant="opt",
+        heatmap=analyze(k3_opt_spec(512, 512, 512, k=3), sampler=FULL),
+        reports=(), actions=(),
+    )
+    ia = load_iteration(write_iteration(tmp_path / "a", [before]))
+    ib = load_iteration(write_iteration(tmp_path / "b", [after]))
+    sd = diff_iterations(ia, ib, region_maps={"gramschm": {"q": "qT"}})
+    (v,) = sd.verdicts
+    # the renamed region is aligned: q's strided pattern counts as fixed
+    assert ("q", "strided") in v.diff.fixed
+
+
+# -- version stamp ----------------------------------------------------------
+
+
+def test_manifest_is_version_stamped(tmp_path):
+    path = write_iteration(tmp_path / "iter0", [_profiled()])
+    manifest = json.loads((path / "manifest.json").read_text())
+    assert manifest["version"] == ARTIFACT_VERSION
+    assert manifest["format"] == "cuthermo-iteration"
+
+
+def test_unknown_version_fails_with_clear_error(tmp_path):
+    path = write_iteration(tmp_path / "iter0", [_profiled()])
+    mpath = path / "manifest.json"
+    manifest = json.loads(mpath.read_text())
+    manifest["version"] = ARTIFACT_VERSION + 999
+    mpath.write_text(json.dumps(manifest))
+    with pytest.raises(SessionError) as exc:
+        load_iteration(path)
+    msg = str(exc.value)
+    assert str(ARTIFACT_VERSION + 999) in msg  # what it found
+    assert str(ARTIFACT_VERSION) in msg  # what it can read
+
+
+def test_session_json_version_checked(tmp_path):
+    sess = ProfileSession(tmp_path / "sess")
+    spath = tmp_path / "sess" / "session.json"
+    manifest = json.loads(spath.read_text())
+    manifest["version"] = 12345
+    spath.write_text(json.dumps(manifest))
+    with pytest.raises(SessionError):
+        ProfileSession(tmp_path / "sess", create=False)
+
+
+def test_load_non_iteration_dir_fails(tmp_path):
+    with pytest.raises(SessionError):
+        load_iteration(tmp_path)
+
+
+def test_duplicate_kernel_names_rejected(tmp_path):
+    with pytest.raises(SessionError) as exc:
+        write_iteration(tmp_path / "iter0", [_profiled(), _profiled()])
+    assert "duplicate" in str(exc.value)
+
+
+def test_missing_npz_fails(tmp_path):
+    path = write_iteration(tmp_path / "iter0", [_profiled()])
+    (path / "gemm.npz").unlink()
+    with pytest.raises(SessionError):
+        load_iteration(path)
+
+
+def test_truncated_manifest_raises_session_error(tmp_path):
+    path = write_iteration(tmp_path / "iter0", [_profiled()])
+    mpath = path / "manifest.json"
+    mpath.write_text(mpath.read_text()[: len(mpath.read_text()) // 2])
+    with pytest.raises(SessionError):
+        load_iteration(path)
+
+
+def test_corrupt_npz_raises_session_error(tmp_path):
+    path = write_iteration(tmp_path / "iter0", [_profiled()])
+    (path / "gemm.npz").write_bytes(b"not an npz at all")
+    with pytest.raises(SessionError):
+        load_iteration(path)
+
+
+def test_iteration_names_numeric_order(tmp_path):
+    # a lagging writer's manifest update must not reorder iterations:
+    # iter10 created on disk, manifest only knows iter0/iter2
+    sess = ProfileSession(tmp_path / "sess")
+    for _ in range(3):
+        sess.add_iteration([_profiled()])
+    # simulate a concurrent writer whose directory beat the manifest
+    import shutil
+
+    shutil.copytree(tmp_path / "sess" / "iter1", tmp_path / "sess" / "iter10")
+    names = ProfileSession(tmp_path / "sess", create=False).iteration_names()
+    assert names == ["iter0", "iter1", "iter2", "iter10"]
+
+
+def test_dedupe_stem_never_collides():
+    from repro.core.render import dedupe_stem, slugify
+
+    seen = {}
+    names = ["gemm:v0", "gemm v0", "gemm_v0_1", "gemm_v0_1"]
+    stems = [dedupe_stem(slugify(n), seen) for n in names]
+    assert len(set(stems)) == len(stems)
