@@ -2,7 +2,11 @@
 
     PYTHONPATH=src python -m benchmarks.run
 
-Prints ``name,us_per_call,derived`` CSV rows per bench, as required.
+Prints ``name,us_per_call,derived`` CSV rows per bench, as required,
+and writes ``BENCH_collect.json`` — the machine-readable record of the
+collection benchmarks (throughput, wall times, shard count, git sha) —
+so the BENCH_* trajectory can be tracked across commits without
+scraping stdout.
 """
 
 from __future__ import annotations
@@ -14,15 +18,17 @@ def main() -> None:
     from benchmarks import bench_overhead, bench_patterns, bench_roofline, bench_speedup
 
     rows = []
-    for name, mod in (
-        ("patterns (paper Table I)", bench_patterns),
-        ("overhead (paper Table II)", bench_overhead),
-        ("speedup (paper Table III)", bench_speedup),
-        ("roofline (§Roofline)", bench_roofline),
+    for name, runner in (
+        ("patterns (paper Table I)", bench_patterns.run),
+        # run_all = Table II + collection throughput + sharded-vs-serial;
+        # it also writes the BENCH_collect.json record
+        ("overhead (paper Table II)", bench_overhead.run_all),
+        ("speedup (paper Table III)", bench_speedup.run),
+        ("roofline (§Roofline)", bench_roofline.run),
     ):
         print(f"\n===== {name} =====")
         try:
-            rows.extend(mod.run())
+            rows.extend(runner())
         except Exception as e:  # noqa: BLE001 — keep the suite going
             print(f"# FAILED: {e!r}")
             rows.append((name, 0.0, f"FAILED {e!r}"))

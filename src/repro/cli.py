@@ -68,6 +68,16 @@ def _build_parser() -> argparse.ArgumentParser:
         help="grid sampler: 'full', or 'window:N' (pin the leading grid "
         "coordinate, admit N programs); default: per-kernel registry choice",
     )
+    pr.add_argument(
+        "--workers",
+        "-w",
+        type=int,
+        default=1,
+        metavar="N",
+        help="shard collection across N worker processes (default: 1, "
+        "serial); results are bit-identical for traces within the "
+        "record cap, artifacts gain per-shard provenance",
+    )
     pr.add_argument("--label", default=None, help="iteration label")
     pr.add_argument("--note", default="", help="free-form iteration note")
     pr.add_argument(
@@ -203,26 +213,50 @@ def _cmd_profile(args: argparse.Namespace) -> int:
     except SessionError as e:
         print(f"cuthermo: {e}", file=sys.stderr)
         return 2
+    workers = max(1, args.workers)
+    collector = None
+    if workers > 1:
+        from repro.core.collector import ShardedCollector
+
+        # one pool shared by every kernel of this invocation
+        collector = ShardedCollector(workers)
     profiled = []
-    for entry, variant in resolved:
-        name = (
-            entry.name
-            if entry_counts[entry.name] == 1
-            else f"{entry.name}:{variant.name}"
-        )
-        pk = profile_kernel(
-            variant.spec(),
-            override or entry.sampler(),
-            variant.dynamic_context(),
-            name=name,
-            variant=variant.name,
-            region_map=entry.region_map,
-        )
-        profiled.append(pk)
-        if not args.quiet:
-            print(f"# {entry.name}:{variant.name}")
-            print(format_report(pk.heatmap))
-            print()
+    try:
+        for entry, variant in resolved:
+            name = (
+                entry.name
+                if entry_counts[entry.name] == 1
+                else f"{entry.name}:{variant.name}"
+            )
+            # build through the registry so the spec is source-stamped —
+            # that ref is what shard workers rebuild the spec from
+            spec, ctx = kreg.build(f"{entry.name}:{variant.name}")
+            pk = profile_kernel(
+                spec,
+                override or entry.sampler(),
+                ctx,
+                name=name,
+                variant=variant.name,
+                region_map=entry.region_map,
+                collector=collector,
+            )
+            profiled.append(pk)
+            if not args.quiet:
+                print(f"# {entry.name}:{variant.name}")
+                if pk.shards:
+                    print(
+                        f"(collected in {len(pk.shards)} shards: "
+                        + ", ".join(
+                            f"#{s.shard} {s.records} records"
+                            for s in pk.shards
+                        )
+                        + ")"
+                    )
+                print(format_report(pk.heatmap))
+                print()
+    finally:
+        if collector is not None:
+            collector.close()
     try:
         it = sess.add_iteration(profiled, label=args.label, note=args.note)
     except SessionError as e:

@@ -20,8 +20,18 @@ from .api import (
     patterns as patterns_of,
     report,
 )
-from .collector import KernelSpec, OperandSpec, ScratchSpec, analyze, collect
-from .heatmap import Analyzer, Heatmap
+from .collector import (
+    KernelSpec,
+    OperandSpec,
+    ScratchSpec,
+    ShardedCollector,
+    analyze,
+    analyze_sharded,
+    collect,
+    sourced_spec,
+)
+from .heatmap import Analyzer, Heatmap, HeatKeys
+from .trace import ShardInfo
 from .patterns import PatternReport
 from .session import Iteration, ProfileSession, SessionDiff, SessionError
 from .trace import GridSampler, KernelWhitelist, TraceBuffer
@@ -29,12 +39,15 @@ from .trace import GridSampler, KernelWhitelist, TraceBuffer
 __all__ = [
     "Analyzer",
     "GridSampler",
+    "HeatKeys",
     "Heatmap",
     "HeatmapDiff",
     "Iteration",
     "ProfileSession",
     "SessionDiff",
     "SessionError",
+    "ShardInfo",
+    "ShardedCollector",
     "diff",
     "hlo_cost",
     "KernelSpec",
@@ -47,6 +60,8 @@ __all__ = [
     "advise",
     "advisor",
     "analyze",
+    "analyze_sharded",
+    "sourced_spec",
     "api",
     "collect",
     "collector",

@@ -23,6 +23,26 @@ touched indices into an extra output buffer (CUTHERMO's GPU-queue trace
 packer, realized as a normal kernel output).  ``drain_dynamic`` converts
 the concrete index arrays into trace records via bulk ``divmod`` /
 ``np.unique`` over the whole (programs x slots) index matrix.
+
+Sharded collection — because heat maps are a merge monoid (distinct
+visited program counts = set unions, see :mod:`repro.core.heatmap`),
+the sampled grid can be partitioned into contiguous program runs and
+collected by independent workers, then merged *exactly*.
+``ShardedCollector`` runs the shards on a spawn-safe process pool:
+worker processes rebuild the kernel context from the registry's seeded
+specs (``KernelSpec.source`` carries the ``name:variant`` ref — the
+spec objects themselves hold index-map lambdas and cannot cross a
+process boundary), collect their ``sampled[lo:hi]`` slice into a
+shard-stamped ``TraceBuffer``, and ship the compact columnar chunks
+back.  The parent re-keys the worker-local disjointness tokens (one
+fresh token per site across all shards — sound because the shards
+partition the grid, so pids stay pairwise disjoint per site) and
+flushes ONE Analyzer over the union of chunks, which the golden suite
+pins bit-identical to the serial single-pass build.  The global record
+cap is split across the shards, so the sharded walk admits at most as
+many records as the serial one; if the cap actually truncates, the
+drop TOTALS remain exact but the surviving record set differs from
+serial (and ``ShardedCollector.analyze`` warns).
 """
 
 from __future__ import annotations
@@ -38,6 +58,7 @@ from .tiles import TileGeometry, block_to_2d
 from .trace import (
     GridSampler,
     RegionInfo,
+    ShardInfo,
     SiteInfo,
     TraceBuffer,
     linearize_array,
@@ -105,6 +126,13 @@ class KernelSpec:
     # optional dynamic access models keyed by operand name:
     # fn(program_id, **context_arrays) -> iterable of flat element indices
     dynamic: Tuple[Tuple[str, Callable[..., Iterable[int]]], ...] = ()
+    # how to rebuild this spec in another process, if known.  Specs hold
+    # index-map lambdas and cannot be pickled, so a ShardedCollector
+    # worker rebuilds from this instead: either a registry ref
+    # ("gemm:v01" — also rebuilds the seeded dynamic context) or a
+    # ("module:function", args, kwargs) builder triple (see
+    # ``sourced_spec``).
+    source: Optional[object] = None
 
 
 @dataclasses.dataclass
@@ -187,10 +215,22 @@ def collect(
     sampler: Optional[GridSampler] = None,
     dynamic_context: Optional[Dict[str, np.ndarray]] = None,
     max_records: int = 2_000_000,
+    *,
+    pids: Optional[np.ndarray] = None,
+    owns_once: bool = True,
+    shard_id: Optional[int] = None,
 ) -> Tuple[TraceBuffer, CollectStats]:
-    """Level-1 collection: walk the sampled grid and record every transfer."""
+    """Level-1 collection: walk the sampled grid and record every transfer.
+
+    ``pids`` overrides the walked program set (a ``(P, ndim)`` slice of
+    ``sampled_grid_array`` — how a shard walks only its partition);
+    ``owns_once`` says whether this walk owns ``once=True`` operands
+    (exactly one shard — the one holding the globally first sampled
+    program — must emit them, or a merged map would double-count their
+    single contributor); ``shard_id`` stamps every emitted chunk.
+    """
     sampler = sampler or GridSampler()
-    buf = TraceBuffer(max_records=max_records)
+    buf = TraceBuffer(max_records=max_records, shard_id=shard_id)
     stats = CollectStats()
     t0 = time.perf_counter()
 
@@ -203,7 +243,10 @@ def collect(
     dynamic_names = {name for name, _ in kernel.dynamic}
     dyn_fns = dict(kernel.dynamic)
 
-    pids = sampled_grid_array(kernel.grid, sampler)
+    if pids is None:
+        pids = sampled_grid_array(kernel.grid, sampler)
+    else:
+        pids = np.asarray(pids, dtype=np.int64)
     n_programs = int(pids.shape[0])
     stats.programs = n_programs
     if n_programs == 0:
@@ -214,6 +257,8 @@ def collect(
     for op in kernel.operands:
         if op.name in dynamic_names:
             continue  # handled below with concrete indices
+        if op.once and not owns_once:
+            continue  # another shard owns the single-program operand
         site = SiteInfo(op.name, f"{kernel.name}/{op.name}", op.space, op.kind)
         group = TraceBuffer.new_group()
         sel = pids[:1] if op.once else pids
@@ -308,6 +353,351 @@ def analyze(
     an = Analyzer(kernel.name, kernel.grid, sampler.describe())
     an.ingest(buf)
     return an.flush()
+
+
+# ---------------------------------------------------------------------------
+# sharded collection: partition the sampled grid, collect on a process pool,
+# merge exactly (the heat-map algebra makes the merge a set union)
+# ---------------------------------------------------------------------------
+
+
+def split_budget(total: int, shards: int) -> List[int]:
+    """Split a global record budget into near-equal per-shard budgets.
+
+    Sums exactly to ``total``, so sharded collection admits at most as
+    many records as the serial cap.  When the cap actually bites, the
+    *specific* records admitted differ from serial (serial truncates an
+    operand-major stream, shards truncate program-partitioned ones), so
+    bit-identity is only guaranteed for traces within the cap —
+    ``ShardedCollector.analyze`` warns loudly when any shard dropped.
+    """
+    shards = max(1, int(shards))
+    base, extra = divmod(int(total), shards)
+    return [base + (1 if i < extra else 0) for i in range(shards)]
+
+
+def shard_bounds(total: int, shards: int) -> List[Tuple[int, int]]:
+    """Contiguous, near-equal [lo, hi) partitions of ``total`` programs.
+
+    Never returns empty shards: the shard count is clipped to ``total``
+    (a 3-program grid sharded 8 ways is 3 shards of one program each).
+    ``total == 0`` yields one empty shard so downstream bookkeeping
+    still sees a shard record.
+    """
+    shards = max(1, min(int(shards), max(total, 1)))
+    edges = np.linspace(0, total, shards + 1).astype(np.int64)
+    return [(int(edges[i]), int(edges[i + 1])) for i in range(shards)]
+
+
+def collect_shard(
+    kernel: KernelSpec,
+    sampler: GridSampler,
+    dynamic_context: Optional[Dict[str, np.ndarray]],
+    lo: int,
+    hi: int,
+    shard: int,
+    max_records: int = 2_000_000,
+) -> Tuple[TraceBuffer, ShardInfo]:
+    """Collect one contiguous sampled-grid shard ``sampled[lo:hi]``.
+
+    Pure function of its arguments — the unit both the in-process
+    fallback and the pool workers execute.  The shard holding the
+    globally first sampled program (``lo == 0``) owns ``once=True``
+    operands.
+    """
+    t0 = time.perf_counter()
+    pids = sampled_grid_array(kernel.grid, sampler)[lo:hi]
+    buf, _ = collect(
+        kernel,
+        sampler,
+        dynamic_context,
+        max_records,
+        pids=pids,
+        owns_once=(lo == 0),
+        shard_id=shard,
+    )
+    # pack one-chunk-per-key runs before the buffer crosses a process
+    # boundary: per-chunk pickle + flush costs would otherwise dominate
+    buf.consolidate()
+    info = ShardInfo(
+        shard=shard,
+        lo=int(lo),
+        hi=int(hi),
+        programs=int(pids.shape[0]),
+        records=len(buf),
+        dropped=buf.dropped,
+        wall_s=time.perf_counter() - t0,
+    )
+    return buf, info
+
+
+def _warm_worker(_: int) -> bool:
+    """Pool warmup: pay the kernel-registry import once per worker."""
+    from repro import kernels  # noqa: F401  (import is the work)
+
+    return True
+
+
+def sourced_spec(fn_ref: str, *args, **kwargs) -> KernelSpec:
+    """Build a spec from a ``"module:function"`` ref and stamp its source.
+
+    The ref plus plain args is picklable, so the resulting spec can be
+    collected by a ``ShardedCollector`` pool at ANY shape — not just the
+    registry's defaults.  Example::
+
+        sourced_spec("repro.kernels.gemm:gemm_v01_spec", 4096, 4096, 4096)
+    """
+    spec = _build_from_ref(fn_ref, args, kwargs)
+    return dataclasses.replace(spec, source=(fn_ref, args, kwargs))
+
+
+def _build_from_ref(fn_ref: str, args, kwargs) -> KernelSpec:
+    import importlib
+
+    mod_name, _, fn_name = fn_ref.partition(":")
+    fn = getattr(importlib.import_module(mod_name), fn_name)
+    return fn(*args, **(kwargs or {}))
+
+
+def _rebuild_spec(source) -> Tuple[KernelSpec, Optional[Dict[str, np.ndarray]]]:
+    """Worker-side spec reconstruction from either source form."""
+    if isinstance(source, str):
+        from repro import kernels as kreg
+
+        return kreg.build(source)
+    fn_ref, args, kwargs = source
+    return _build_from_ref(fn_ref, args, kwargs), None
+
+
+def _spec_fingerprint(spec: KernelSpec) -> Tuple:
+    """Cheap picklable structural identity of a spec.
+
+    Guards the source round trip: a worker rebuilds the spec from its
+    source ref, so a parent spec whose STRUCTURE was modified after
+    stamping (shapes, blocks, operand set, ...) must be rejected, not
+    silently replaced by the pristine rebuild.  Index-map *code* cannot
+    be fingerprinted — mutating only a lambda while keeping the stale
+    source is the one hole this cannot close.
+    """
+    return (
+        spec.name,
+        tuple(spec.grid),
+        tuple(
+            (op.name, tuple(op.shape), np.dtype(op.dtype).str,
+             tuple(op.block_shape), op.kind, op.space,
+             tuple(op.origin), op.once)
+            for op in spec.operands
+        ),
+        tuple(
+            (sc.name, tuple(sc.shape), np.dtype(sc.dtype).str, sc.kind,
+             sc.access_model is None)
+            for sc in spec.scratch
+        ),
+        tuple(name for name, _ in spec.dynamic),
+    )
+
+
+def _collect_shard_task(task: dict) -> Tuple[TraceBuffer, ShardInfo]:
+    """Pool entry point: rebuild the spec from its source ref, collect.
+
+    Spawn-safe by construction — nothing unpicklable crosses the
+    process boundary.  The spec (and, for registry refs, its seeded
+    dynamic context) is rebuilt from ``task['source']``; an explicit
+    dynamic context (plain numpy arrays) overrides the seeded one.
+    """
+    spec, ctx = _rebuild_spec(task["source"])
+    if _spec_fingerprint(spec) != task["fingerprint"]:
+        raise ValueError(
+            f"shard worker rebuilt {task['source']!r} into a spec that "
+            "does not structurally match the parent's (grid, operand, "
+            "or scratch layout differs); the parent spec was modified "
+            "after source stamping — collect it serially instead"
+        )
+    if task["dynamic_context"] is not None:
+        ctx = task["dynamic_context"]
+    return collect_shard(
+        spec,
+        task["sampler"],
+        ctx,
+        task["lo"],
+        task["hi"],
+        task["shard"],
+        task["max_records"],
+    )
+
+
+def _unify_shard_groups(bufs: Sequence[TraceBuffer]) -> None:
+    """Re-key worker-local disjointness tokens across shard buffers.
+
+    Each worker process numbers its group tokens from 1, so tokens from
+    different shards collide numerically without meaning anything.
+    Every chunk of one *site* gets one fresh parent token across all
+    shards — sound only because the shards partition the sampled grid,
+    which keeps record pids pairwise disjoint per site (the token's
+    contract) and lets the Analyzer keep its weighted fast path.
+    Chunks without a token stay exact-path.
+    """
+    tokens: Dict[SiteInfo, int] = {}
+    for buf in bufs:
+        for chunk in buf.chunks:
+            if chunk.group is None:
+                continue
+            token = tokens.get(chunk.site)
+            if token is None:
+                token = TraceBuffer.new_group()
+                tokens[chunk.site] = token
+            chunk.group = token
+
+
+class ShardedCollector:
+    """Partition a sampled grid and collect it on a process pool.
+
+    The pool is lazy and persistent: it spins up on first use (spawn
+    start method by default — fork after jax initialization is not
+    safe) and is reused across ``collect``/``analyze`` calls until
+    :meth:`close`, so a multi-kernel profiling run pays worker startup
+    once.  Use as a context manager, or call :meth:`close` yourself.
+
+    Specs without a registry ``source`` ref cannot cross the process
+    boundary (their index maps are lambdas); those are sharded and
+    merged **in-process** — the same algebra, no parallelism — so the
+    call never silently changes semantics, it only loses speed.
+    """
+
+    def __init__(
+        self,
+        workers: int,
+        *,
+        max_records: int = 2_000_000,
+        start_method: str = "spawn",
+    ):
+        self.workers = max(1, int(workers))
+        self.max_records = max_records
+        self.start_method = start_method
+        self._pool = None
+
+    # -- pool lifecycle -----------------------------------------------------
+    def _ensure_pool(self):
+        if self._pool is None:
+            import concurrent.futures
+            import multiprocessing
+
+            self._pool = concurrent.futures.ProcessPoolExecutor(
+                max_workers=self.workers,
+                mp_context=multiprocessing.get_context(self.start_method),
+            )
+        return self._pool
+
+    def warmup(self) -> None:
+        """Pre-import the kernel registry in every worker (pays the
+        spawn + import cost up front, outside any timed section)."""
+        pool = self._ensure_pool()
+        list(pool.map(_warm_worker, range(self.workers)))
+
+    def close(self) -> None:
+        """Shut the pool down (idempotent)."""
+        if self._pool is not None:
+            self._pool.shutdown()
+            self._pool = None
+
+    def __enter__(self) -> "ShardedCollector":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- collection ---------------------------------------------------------
+    def collect(
+        self,
+        kernel: KernelSpec,
+        sampler: Optional[GridSampler] = None,
+        dynamic_context: Optional[Dict[str, np.ndarray]] = None,
+    ) -> Tuple[List[TraceBuffer], Tuple[ShardInfo, ...]]:
+        """Collect every shard; returns (shard buffers, shard infos).
+
+        The returned buffers have already had their group tokens
+        unified — ingesting them all into one Analyzer flushes the
+        exact single-pass heat map.
+        """
+        sampler = sampler or GridSampler()
+        total = int(sampled_grid_array(kernel.grid, sampler).shape[0])
+        bounds = shard_bounds(total, self.workers)
+        # the GLOBAL record cap is divided across shards, so a sharded
+        # collect never admits more records than the serial one would
+        budgets = split_budget(self.max_records, len(bounds))
+        if kernel.source is None or len(bounds) == 1:
+            results = [
+                collect_shard(
+                    kernel, sampler, dynamic_context, lo, hi, i,
+                    budgets[i],
+                )
+                for i, (lo, hi) in enumerate(bounds)
+            ]
+        else:
+            tasks = [
+                {
+                    "source": kernel.source,
+                    "fingerprint": _spec_fingerprint(kernel),
+                    "sampler": sampler,
+                    "dynamic_context": dynamic_context,
+                    "lo": lo,
+                    "hi": hi,
+                    "shard": i,
+                    "max_records": budgets[i],
+                }
+                for i, (lo, hi) in enumerate(bounds)
+            ]
+            pool = self._ensure_pool()
+            results = list(pool.map(_collect_shard_task, tasks))
+        bufs = [b for b, _ in results]
+        infos = tuple(i for _, i in results)
+        _unify_shard_groups(bufs)
+        return bufs, infos
+
+    def analyze(
+        self,
+        kernel: KernelSpec,
+        sampler: Optional[GridSampler] = None,
+        dynamic_context: Optional[Dict[str, np.ndarray]] = None,
+    ) -> Heatmap:
+        """Sharded collect + merge + flush: the parallel ``analyze``.
+
+        Bit-identical to :func:`analyze` on the same arguments for any
+        trace within the record cap (pinned by the golden-equivalence
+        suite), with per-shard provenance in ``Heatmap.shards``.  When
+        the cap bites, drop *totals* stay exact (each drop is counted
+        in exactly one shard) but the surviving record set differs from
+        serial truncation — a RuntimeWarning flags it.
+        """
+        sampler = sampler or GridSampler()
+        bufs, infos = self.collect(kernel, sampler, dynamic_context)
+        dropped = sum(i.dropped for i in infos)
+        if dropped:
+            import warnings
+
+            warnings.warn(
+                f"{kernel.name}: {dropped} records dropped at the "
+                f"max_records={self.max_records} cap; a truncated "
+                "sharded heat map is not bit-identical to the serial "
+                "build (raise max_records or sample a window)",
+                RuntimeWarning,
+                stacklevel=2,
+            )
+        an = Analyzer(kernel.name, kernel.grid, sampler.describe())
+        for buf in bufs:
+            an.ingest(buf)
+        return dataclasses.replace(an.flush(), shards=infos)
+
+
+def analyze_sharded(
+    kernel: KernelSpec,
+    sampler: Optional[GridSampler] = None,
+    dynamic_context: Optional[Dict[str, np.ndarray]] = None,
+    workers: int = 2,
+) -> Heatmap:
+    """One-shot sharded :func:`analyze` (owns a pool for the call)."""
+    with ShardedCollector(workers) as sc:
+        return sc.analyze(kernel, sampler, dynamic_context)
 
 
 # ---------------------------------------------------------------------------

@@ -34,6 +34,7 @@ from .tiles import TileGeometry
 from .trace import (
     AccessRecord,
     RegionInfo,
+    ShardInfo,
     TraceBuffer,
     TraceChunk,
     linearize_array,
@@ -80,6 +81,99 @@ class HeatRow:
         return self.word_temps + (self.sector_temp,)
 
 
+@dataclasses.dataclass(frozen=True)
+class HeatKeys:
+    """The packed key-set state behind one region's temperatures.
+
+    Temperatures are *distinct-contributor counts*; the sets being
+    counted are exactly the set bits of the paper's bitmasks:
+
+        (word_keys, word_pids)      distinct (tag*words + word, pid)
+                                    pairs — one per set word-mask bit
+        (sector_tags, sector_pids)  distinct (tag, pid) pairs — one per
+                                    set sector-mask bit
+        pids                        distinct contributor (linearized
+                                    program) ids, including zero-touch
+                                    contributors
+
+    Because these are sets, heat maps form a **merge monoid**: the union
+    of two regions' key sets is the key set of their combined trace, no
+    matter how the trace was partitioned — which is what makes sharded
+    collection exact (`RegionHeatmap.merge`).  Summing temperatures
+    would instead double-count contributors the shards share.
+
+    All arrays are int64 and kept in the canonical ``unique_pairs``
+    order (ascending primary, then secondary), so equal states compare
+    equal array-wise.
+    """
+
+    word_keys: np.ndarray  # (N,) packed tag * words_per_sector + word
+    word_pids: np.ndarray  # (N,) linearized program ids, parallel
+    sector_tags: np.ndarray  # (M,) sector tags
+    sector_pids: np.ndarray  # (M,) linearized program ids, parallel
+    pids: np.ndarray  # (P,) distinct contributor ids, ascending
+
+    @classmethod
+    def empty(cls) -> "HeatKeys":
+        """The monoid identity: no touches, no contributors."""
+        z = np.empty(0, np.int64)
+        return cls(z, z, z, z, z)
+
+    def union(self, other: "HeatKeys") -> "HeatKeys":
+        """Exact set union (the monoid operation)."""
+        wk, wp = unique_pairs(
+            np.concatenate([self.word_keys, other.word_keys]),
+            np.concatenate([self.word_pids, other.word_pids]),
+        )
+        st, sp = unique_pairs(
+            np.concatenate([self.sector_tags, other.sector_tags]),
+            np.concatenate([self.sector_pids, other.sector_pids]),
+        )
+        return HeatKeys(
+            word_keys=wk,
+            word_pids=wp,
+            sector_tags=st,
+            sector_pids=sp,
+            pids=np.union1d(self.pids, other.pids),
+        )
+
+    def equals(self, other: "HeatKeys") -> bool:
+        """Array-wise equality of the two key-set states."""
+        return (
+            np.array_equal(self.word_keys, other.word_keys)
+            and np.array_equal(self.word_pids, other.word_pids)
+            and np.array_equal(self.sector_tags, other.sector_tags)
+            and np.array_equal(self.sector_pids, other.sector_pids)
+            and np.array_equal(self.pids, other.pids)
+        )
+
+
+def _temps_from_keys(
+    keys: HeatKeys, words: int
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, int]:
+    """Derive (tags, word_temps, sector_temps, n_programs) from key sets.
+
+    This is the counting step of the Analyzer's exact path, factored out
+    so merged key sets flush through the identical arithmetic.
+    """
+    n_programs = int(keys.pids.shape[0])
+    if keys.word_keys.size == 0:
+        return (
+            np.empty(0, np.int64),
+            np.empty((0, words), np.int64),
+            np.empty(0, np.int64),
+            n_programs,
+        )
+    ukeys, word_counts = np.unique(keys.word_keys, return_counts=True)
+    utags, sector_counts = np.unique(keys.sector_tags, return_counts=True)
+    key_tags = ukeys // words
+    key_words = ukeys % words
+    word_temps = np.zeros((utags.shape[0], words), dtype=np.int64)
+    rows_idx = np.searchsorted(utags, key_tags)
+    word_temps[rows_idx, key_words] = word_counts
+    return utags, word_temps, sector_counts.astype(np.int64), n_programs
+
+
 class RegionHeatmap:
     """Flushed heat map of one memory region, array-backed.
 
@@ -92,6 +186,13 @@ class RegionHeatmap:
     ``rows`` materializes the legacy ``HeatRow`` tuple lazily (cached);
     constructing from ``rows=`` is still supported for the reference
     path and hand-built fixtures.
+
+    ``key_state`` optionally carries the packed ``(tag, word, pid)`` /
+    ``(tag, pid)`` key sets the temperatures were counted from
+    (``Analyzer.flush(keep_keys=True)``).  It is what makes
+    :meth:`merge` *exact*: merging unions the sets and recounts, so the
+    result is bit-identical to a single-pass build over the combined
+    trace — temperatures alone are lossy and cannot be merged.
     """
 
     def __init__(
@@ -103,9 +204,11 @@ class RegionHeatmap:
         tags: Optional[np.ndarray] = None,
         word_temps: Optional[np.ndarray] = None,
         sector_temps: Optional[np.ndarray] = None,
+        key_state: Optional[HeatKeys] = None,
     ):
         self.region = region
         self.n_programs = int(n_programs)
+        self.key_state = key_state
         if rows is not None:
             rows = tuple(rows)
             self._rows: Optional[Tuple[HeatRow, ...]] = rows
@@ -180,6 +283,43 @@ class RegionHeatmap:
             sector_temp=int(self._sector_temps[i]),
         )
 
+    # -- merge algebra ------------------------------------------------------
+    def merge(self, other: "RegionHeatmap") -> "RegionHeatmap":
+        """Exact union of two region heat maps of the SAME region.
+
+        Unions the packed ``(tag, word, pid)`` key sets and the
+        ``(tag, pid)`` sector (bitmask) state, then recounts distinct
+        contributors — NOT temperature summing, so the result is
+        bit-identical to a single-pass build over the combined trace
+        even when the two sides share contributors (e.g. overlapping
+        sampler windows).  Both sides must carry ``key_state``
+        (flush with ``keep_keys=True``).
+        """
+        if self.region != other.region:
+            raise ValueError(
+                f"cannot merge heat maps of different regions: "
+                f"{self.region.name!r} vs {other.region.name!r}"
+            )
+        if self.key_state is None or other.key_state is None:
+            raise ValueError(
+                f"region {self.region.name!r}: merge needs the packed "
+                "key-set state on both sides; flush the shards with "
+                "Analyzer.flush(keep_keys=True)"
+            )
+        merged = self.key_state.union(other.key_state)
+        words = self.words_per_sector()
+        tags, word_temps, sector_temps, n_programs = _temps_from_keys(
+            merged, words
+        )
+        return RegionHeatmap(
+            region=self.region,
+            n_programs=n_programs,
+            tags=tags,
+            word_temps=word_temps,
+            sector_temps=sector_temps,
+            key_state=merged,
+        )
+
     @property
     def max_sector_temp(self) -> int:
         if self._sector_temps.size == 0:
@@ -219,7 +359,14 @@ class RegionHeatmap:
 
 @dataclasses.dataclass(frozen=True)
 class Heatmap:
-    """The full heat map of one profiled kernel."""
+    """The full heat map of one profiled kernel.
+
+    ``shards`` is collection provenance: one :class:`ShardInfo` per
+    worker shard when the trace was collected by a
+    ``ShardedCollector``, empty for a single-pass build.  Provenance is
+    deliberately excluded from heat-map equality (`heatmaps_equal`):
+    a sharded build IS the serial build, just produced differently.
+    """
 
     kernel: str
     grid: Tuple[int, ...]
@@ -227,6 +374,7 @@ class Heatmap:
     regions: Tuple[RegionHeatmap, ...]
     n_records: int
     dropped: int
+    shards: Tuple[ShardInfo, ...] = ()
 
     def region(self, name: str) -> RegionHeatmap:
         for r in self.regions:
@@ -236,6 +384,48 @@ class Heatmap:
 
     def region_names(self) -> List[str]:
         return [r.region.name for r in self.regions]
+
+    # -- merge algebra ------------------------------------------------------
+    def merge(self, other: "Heatmap") -> "Heatmap":
+        """Exact union of two heat maps of the same kernel launch.
+
+        Regions are aligned by name and merged through
+        :meth:`RegionHeatmap.merge` (set union of the packed key state —
+        see :class:`HeatKeys`); a region present on one side only passes
+        through unchanged.  Record and drop counts add (each record /
+        drop happened in exactly one shard buffer), shard provenance
+        concatenates.  With shards that partition a sampled grid the
+        result is bit-identical to the single-pass build of the whole
+        grid, which `tests/test_golden_equivalence.py` pins for every
+        registry kernel.
+        """
+        if self.kernel != other.kernel or self.grid != other.grid:
+            raise ValueError(
+                f"cannot merge heat maps of different launches: "
+                f"{self.kernel!r} {self.grid} vs {other.kernel!r} "
+                f"{other.grid}"
+            )
+        sampler = (
+            self.sampler
+            if self.sampler == other.sampler
+            else f"{self.sampler}+{other.sampler}"
+        )
+        mine = {r.region.name: r for r in self.regions}
+        theirs = {r.region.name: r for r in other.regions}
+        merged: List[RegionHeatmap] = []
+        for name in sorted(set(mine) | set(theirs)):
+            a, b = mine.get(name), theirs.get(name)
+            merged.append(a.merge(b) if a is not None and b is not None
+                          else (a if a is not None else b))
+        return Heatmap(
+            kernel=self.kernel,
+            grid=self.grid,
+            sampler=sampler,
+            regions=tuple(merged),
+            n_records=self.n_records + other.n_records,
+            dropped=self.dropped + other.dropped,
+            shards=self.shards + other.shards,
+        )
 
     # -- transaction model --------------------------------------------------
     def _tx_regions(self, region: Optional[str]) -> Tuple[RegionHeatmap, ...]:
@@ -287,6 +477,7 @@ class Heatmap:
             "sampler": self.sampler,
             "n_records": self.n_records,
             "dropped": self.dropped,
+            "shards": [s.as_dict() for s in self.shards],
             "transactions": self.sector_transactions(),
             "demanded_words": self.useful_word_transactions(),
             "waste_ratio": self.waste_ratio(),
@@ -428,9 +619,15 @@ class Analyzer:
             )
 
     def _flush_region(
-        self, name: str, words: int
-    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, int]:
-        """(tags, word_temps (S, words), sector_temps, n_programs)."""
+        self, name: str, words: int, keep_keys: bool = False
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, int, Optional[HeatKeys]]:
+        """(tags, word_temps (S, words), sector_temps, n_programs, keys).
+
+        ``keep_keys`` forces the exact (key, pid) materialization and
+        additionally returns the packed :class:`HeatKeys` set state —
+        the carrier of the merge monoid.  The weighted fast path cannot
+        keep keys (avoiding that materialization is its whole point).
+        """
         entries = self._chunk_map.get(name, [])
         if not entries:
             return (
@@ -438,12 +635,14 @@ class Analyzer:
                 np.empty((0, words), np.int64),
                 np.empty(0, np.int64),
                 0,
+                HeatKeys.empty() if keep_keys else None,
             )
-        n_programs = int(
-            np.unique(np.concatenate([e.lin for e in entries])).shape[0]
-        )
+        all_lins = np.unique(np.concatenate([e.lin for e in entries]))
+        n_programs = int(all_lins.shape[0])
         groups = {e.chunk.group for e in entries}
-        fast = len(groups) == 1 and None not in groups
+        fast = (
+            not keep_keys and len(groups) == 1 and None not in groups
+        )
         if fast:
             key_parts: List[np.ndarray] = []
             keyw_parts: List[np.ndarray] = []
@@ -478,6 +677,7 @@ class Analyzer:
                     np.empty((0, words), np.int64),
                     np.empty(0, np.int64),
                     n_programs,
+                    None,
                 )
             all_keys = np.concatenate(key_parts)
             all_kw = np.concatenate(keyw_parts)
@@ -487,45 +687,70 @@ class Analyzer:
             all_tw = np.concatenate(tagw_parts)
             utags, tinv = np.unique(all_tags, return_inverse=True)
             sector_counts = np.bincount(tinv, weights=all_tw).astype(np.int64)
-        else:
-            # exact path: expand to (key, pid) events and dedupe
-            ev_keys: List[np.ndarray] = []
-            ev_pids: List[np.ndarray] = []
-            for e in entries:
-                chunk = e.chunk
-                if chunk.tags.size == 0:
-                    continue
-                self._check_words(name, chunk, words)
-                keys = chunk.tags * words + chunk.words
-                if chunk.ptr is None:
-                    ev_keys.append(np.tile(keys, chunk.n_records))
-                    ev_pids.append(np.repeat(e.lin, keys.shape[0]))
-                else:
-                    ev_keys.append(keys)
-                    ev_pids.append(np.repeat(e.lin, np.diff(chunk.ptr)))
-            if not ev_keys:
-                return (
-                    np.empty(0, np.int64),
-                    np.empty((0, words), np.int64),
-                    np.empty(0, np.int64),
-                    n_programs,
-                )
-            keys = np.concatenate(ev_keys)
-            pids = np.concatenate(ev_pids)
-            # distinct (tag, word, pid) triples, then distinct (tag, pid)
-            ks, ps = unique_pairs(keys, pids)
-            ukeys, word_counts = np.unique(ks, return_counts=True)
-            dtags, _ = unique_pairs(ks // words, ps)
-            utags, sector_counts = np.unique(dtags, return_counts=True)
-        # scatter packed word keys into the (S, words) matrix
-        key_tags = ukeys // words
-        key_words = ukeys % words
-        word_temps = np.zeros((utags.shape[0], words), dtype=np.int64)
-        rows_idx = np.searchsorted(utags, key_tags)
-        word_temps[rows_idx, key_words] = word_counts
-        return utags, word_temps, sector_counts.astype(np.int64), n_programs
+            # scatter packed word keys into the (S, words) matrix
+            key_tags = ukeys // words
+            key_words = ukeys % words
+            word_temps = np.zeros((utags.shape[0], words), dtype=np.int64)
+            rows_idx = np.searchsorted(utags, key_tags)
+            word_temps[rows_idx, key_words] = word_counts
+            return (
+                utags,
+                word_temps,
+                sector_counts.astype(np.int64),
+                n_programs,
+                None,
+            )
+        # exact path: expand to (key, pid) events, dedupe into the packed
+        # key-set state, and count through _temps_from_keys — the SAME
+        # arithmetic RegionHeatmap.merge uses, so merged key sets and
+        # direct flushes cannot diverge
+        ev_keys: List[np.ndarray] = []
+        ev_pids: List[np.ndarray] = []
+        for e in entries:
+            chunk = e.chunk
+            if chunk.tags.size == 0:
+                continue
+            self._check_words(name, chunk, words)
+            keys = chunk.tags * words + chunk.words
+            if chunk.ptr is None:
+                ev_keys.append(np.tile(keys, chunk.n_records))
+                ev_pids.append(np.repeat(e.lin, keys.shape[0]))
+            else:
+                ev_keys.append(keys)
+                ev_pids.append(np.repeat(e.lin, np.diff(chunk.ptr)))
+        empty = np.empty(0, np.int64)
+        keys = np.concatenate(ev_keys) if ev_keys else empty
+        pids = np.concatenate(ev_pids) if ev_pids else empty
+        # distinct (tag, word, pid) triples, then distinct (tag, pid)
+        ks, ps = unique_pairs(keys, pids)
+        stags, spids = unique_pairs(ks // words, ps)
+        keys_state = HeatKeys(
+            word_keys=ks,
+            word_pids=ps,
+            sector_tags=stags,
+            sector_pids=spids,
+            pids=all_lins,
+        )
+        tags, word_temps, sector_temps, n_programs = _temps_from_keys(
+            keys_state, words
+        )
+        return (
+            tags,
+            word_temps,
+            sector_temps,
+            n_programs,
+            keys_state if keep_keys else None,
+        )
 
-    def flush(self) -> Heatmap:
+    def flush(self, keep_keys: bool = False) -> Heatmap:
+        """Flush the ingested state into a :class:`Heatmap`.
+
+        ``keep_keys=True`` attaches the packed key-set state to every
+        region (`RegionHeatmap.key_state`) so the result participates in
+        the exact merge algebra (`Heatmap.merge`).  It costs the full
+        (key, pid) materialization — use it on shard-sized traces, not
+        on full production grids you never intend to merge.
+        """
         region_maps: List[RegionHeatmap] = []
         for name in sorted(set(self._regions) | set(self._chunk_map)):
             region = self._regions.get(name)
@@ -536,8 +761,8 @@ class Analyzer:
                     geometry=TileGeometry(shape=(8, 128), itemsize=4, name=name),
                 )
             words = region.geometry.sublanes
-            tags, word_temps, sector_temps, n_programs = self._flush_region(
-                name, words
+            tags, word_temps, sector_temps, n_programs, keys = (
+                self._flush_region(name, words, keep_keys=keep_keys)
             )
             region_maps.append(
                 RegionHeatmap(
@@ -546,6 +771,7 @@ class Analyzer:
                     tags=tags,
                     word_temps=word_temps,
                     sector_temps=sector_temps,
+                    key_state=keys,
                 )
             )
         return Heatmap(

@@ -236,6 +236,32 @@ class ReportEntry:
         """Display name of this entry (registry name or kernel name)."""
         return self.name or self.heatmap.kernel
 
+    @property
+    def shards(self):
+        """Per-shard collection provenance of this entry's heat map."""
+        return self.heatmap.shards
+
+    @property
+    def merge_stats(self) -> str:
+        """One-line sharded-collection summary ('' for serial profiles).
+
+        Reports the shard count and the merged record/drop totals — the
+        numbers that prove the shards cover the whole sampled grid once.
+        """
+        shards = self.shards
+        if not shards:
+            return ""
+        records = sum(s.records for s in shards)
+        dropped = sum(s.dropped for s in shards)
+        programs = sum(s.programs for s in shards)
+        out = (
+            f"collected in {len(shards)} shards: {programs} programs, "
+            f"{records} records merged exactly"
+        )
+        if dropped:
+            out += f", {dropped} dropped"
+        return out
+
     @classmethod
     def from_profiled(cls, pk) -> "ReportEntry":
         """Build an entry from a session ``ProfiledKernel`` (duck-typed)."""
@@ -378,6 +404,16 @@ def render_session_html(
                if e.wall_s else "")
             + "</p>"
         )
+        if e.merge_stats:
+            parts.append(
+                f"<p class='evidence'>{_html.escape(e.merge_stats)} "
+                + " ".join(
+                    f"[#{s.shard}: programs {s.lo}-{s.hi}, "
+                    f"{s.records} rec]"
+                    for s in e.shards
+                )
+                + "</p>"
+            )
         if e.reports:
             parts.append("<h4>detected patterns</h4><ul>")
             for rep in e.reports:
@@ -441,6 +477,8 @@ def render_session_markdown(
             f"{_fmt_bytes(demanded)} demanded "
             f"({hm.waste_ratio():.2f}x waste)",
         ]
+        if e.merge_stats:
+            lines.append(f"- {e.merge_stats}")
         for rname, r in stats["regions"].items():
             lines.append(
                 f"- region `{rname}` [{r['space']}]: "

@@ -42,17 +42,28 @@ from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple, Uni
 import numpy as np
 
 from .advisor import Action, advise
-from .collector import KernelSpec, analyze
+from .collector import KernelSpec, ShardedCollector, analyze
 from .diff import HeatmapDiff, diff as diff_heatmaps
 from .heatmap import Heatmap, RegionHeatmap
 from .patterns import PatternReport, detect_all
 from .render import dedupe_stem, slugify
 from .tiles import TileGeometry
-from .trace import GridSampler, RegionInfo
+from .trace import GridSampler, RegionInfo, ShardInfo
 
 #: Version stamp written into every manifest.  Bump on any change to the
-#: npz key layout or the manifest schema; loaders reject other versions.
-ARTIFACT_VERSION = 1
+#: npz key layout or the manifest schema; loaders reject versions they
+#: do not know how to read.
+#:
+#: v1  (PR 2) initial format
+#: v2  (sharded collection) adds optional per-shard provenance to each
+#:     kernel's heatmap metadata ("shards": [{shard, lo, hi, programs,
+#:     records, dropped, wall_s}, ...]).  Backward compatible on read:
+#:     v1 artifacts simply load with empty shard provenance.
+ARTIFACT_VERSION = 2
+
+#: Versions this build can load.  v1 lacks shard provenance but is
+#: otherwise identical; writers always stamp ARTIFACT_VERSION.
+SUPPORTED_VERSIONS = (1, 2)
 
 SESSION_FORMAT = "cuthermo-session"
 ITERATION_FORMAT = "cuthermo-iteration"
@@ -81,6 +92,8 @@ def heatmap_to_arrays(hm: Heatmap) -> Tuple[dict, Dict[str, np.ndarray]]:
         "sampler": hm.sampler,
         "n_records": hm.n_records,
         "dropped": hm.dropped,
+        # per-shard collection provenance (v2; empty for serial builds)
+        "shards": [s.as_dict() for s in hm.shards],
         "regions": [],
     }
     arrays: Dict[str, np.ndarray] = {}
@@ -131,6 +144,10 @@ def arrays_to_heatmap(meta: Mapping, arrays: Mapping[str, np.ndarray]) -> Heatma
         regions=tuple(regions),
         n_records=int(meta["n_records"]),
         dropped=int(meta["dropped"]),
+        # v1 manifests carry no shard provenance: loads as unsharded
+        shards=tuple(
+            ShardInfo.from_dict(d) for d in meta.get("shards", [])
+        ),
     )
 
 
@@ -172,6 +189,8 @@ def profile_kernel(
     name: Optional[str] = None,
     variant: Optional[str] = None,
     region_map: Sequence[Tuple[str, str]] = (),
+    workers: int = 1,
+    collector: Optional[ShardedCollector] = None,
 ) -> "ProfiledKernel":
     """Profile one spec into a ProfiledKernel (the single assembly point).
 
@@ -180,10 +199,22 @@ def profile_kernel(
     and stamps the wall time.  ``name`` defaults to the spec's own name;
     every profiling entry point (session, CLI, examples) goes through
     here so the derivation never diverges.
+
+    ``collector`` (a :class:`~repro.core.collector.ShardedCollector`,
+    reusable across kernels) or ``workers > 1`` routes collection
+    through the sharded path; the heat map is bit-identical either way,
+    and the sharded one carries per-shard provenance that the session
+    artifact persists.
     """
     sampler = sampler or GridSampler(None)
     t0 = time.perf_counter()
-    hm = analyze(spec, sampler=sampler, dynamic_context=dynamic_context)
+    if collector is not None:
+        hm = collector.analyze(spec, sampler, dynamic_context)
+    elif workers > 1:
+        with ShardedCollector(workers) as sc:
+            hm = sc.analyze(spec, sampler, dynamic_context)
+    else:
+        hm = analyze(spec, sampler=sampler, dynamic_context=dynamic_context)
     wall = time.perf_counter() - t0
     return ProfiledKernel(
         name=name or spec.name,
@@ -209,6 +240,11 @@ class ProfiledKernel:
     # known region renames an optimization of this kernel performs
     # (e.g. q -> qT); persisted so later diffs align automatically
     region_map: Tuple[Tuple[str, str], ...] = ()
+
+    @property
+    def shards(self) -> Tuple[ShardInfo, ...]:
+        """Per-shard collection provenance (empty for serial profiles)."""
+        return self.heatmap.shards
 
     @property
     def transactions(self) -> int:
@@ -311,11 +347,13 @@ class SessionDiff:
 
 def _check_version(manifest: Mapping, path: Path) -> None:
     version = manifest.get("version")
-    if version != ARTIFACT_VERSION:
+    if version not in SUPPORTED_VERSIONS:
+        supported = ", ".join(str(v) for v in SUPPORTED_VERSIONS)
         raise SessionError(
             f"{path}: unsupported artifact version {version!r}; this build "
-            f"reads version {ARTIFACT_VERSION}.  Re-profile with this "
-            "version of cuthermo (or load with the version that wrote it)."
+            f"reads versions {supported} and writes {ARTIFACT_VERSION}.  "
+            "Re-profile with this version of cuthermo (or load with the "
+            "version that wrote it)."
         )
 
 
@@ -537,8 +575,21 @@ class ProfileSession:
     (and by the ``cuthermo`` CLI) from the directory alone.
     """
 
-    def __init__(self, root: Union[str, Path], create: bool = True):
-        """Open (and by default create) the session at ``root``."""
+    def __init__(
+        self,
+        root: Union[str, Path],
+        create: bool = True,
+        workers: int = 1,
+    ):
+        """Open (and by default create) the session at ``root``.
+
+        ``workers > 1`` collects every subsequent :meth:`profile` call
+        through a sharded process pool (one pool per profile call,
+        shared by that call's kernels).  Results are bit-identical to
+        serial profiling; the artifacts additionally record per-shard
+        provenance.
+        """
+        self.workers = max(1, int(workers))
         self.root = Path(root)
         spath = self.root / "session.json"
         if spath.is_file():
@@ -614,6 +665,7 @@ class ProfileSession:
         region_maps: Optional[Mapping[str, Mapping[str, str]]] = None,
         label: Optional[str] = None,
         note: str = "",
+        workers: Optional[int] = None,
     ) -> Iteration:
         """Profile every spec and persist the results as the next iteration.
 
@@ -629,23 +681,40 @@ class ProfileSession:
         transfer totals, which only align when both sides cover the
         whole problem.  Pass an explicit window sampler to trade
         coverage for speed on very large grids.
+
+        ``workers`` overrides the session's worker count for this call;
+        with more than one worker, collection is sharded across ONE
+        process pool shared by all of the call's kernels (bit-identical
+        results, per-shard provenance in the artifact).
         """
         sampler = sampler or GridSampler(None)
         dynamic_contexts = dynamic_contexts or {}
         names = names or {}
         variants = variants or {}
         region_maps = region_maps or {}
-        profiled = [
-            profile_kernel(
-                spec,
-                sampler,
-                dynamic_contexts.get(spec.name),
-                name=names.get(spec.name),
-                variant=variants.get(spec.name),
-                region_map=sorted(region_maps.get(spec.name, {}).items()),
-            )
-            for spec in specs
-        ]
+        n_workers = self.workers if workers is None else max(1, int(workers))
+
+        def _profile_all(collector: Optional[ShardedCollector]):
+            return [
+                profile_kernel(
+                    spec,
+                    sampler,
+                    dynamic_contexts.get(spec.name),
+                    name=names.get(spec.name),
+                    variant=variants.get(spec.name),
+                    region_map=sorted(
+                        region_maps.get(spec.name, {}).items()
+                    ),
+                    collector=collector,
+                )
+                for spec in specs
+            ]
+
+        if n_workers > 1:
+            with ShardedCollector(n_workers) as sc:
+                profiled = _profile_all(sc)
+        else:
+            profiled = _profile_all(None)
         return self.add_iteration(profiled, label=label, note=note)
 
     def add_iteration(
@@ -717,6 +786,7 @@ class ProfileSession:
 
 __all__ = [
     "ARTIFACT_VERSION",
+    "SUPPORTED_VERSIONS",
     "Iteration",
     "KernelVerdict",
     "ProfileSession",

@@ -42,6 +42,11 @@ bulk by the collector:
             count distinct contributors with weighted sums instead of
             per-bit set union; chunks without a token (compat appends)
             take the exact dedup path.
+    shard   optional shard id (see ``ShardInfo``): which contiguous
+            sampled-grid partition produced this chunk.  Pure
+            provenance — it never changes dedup semantics — but it lets
+            drop accounting and merge stats stay exact per shard when a
+            ``ShardedCollector`` splits one collect across workers.
 
 A broadcast chunk stores P + 2T integers for P x T logical touch events
 — the representation that lets a full-grid GEMM trace fit in memory and
@@ -95,6 +100,7 @@ class TraceChunk:
     words: np.ndarray  # (T,) int64
     ptr: Optional[np.ndarray] = None  # (P+1,) int64 CSR; None = broadcast
     group: Optional[int] = None  # disjointness token; None = compat/exact
+    shard: Optional[int] = None  # producing shard id; None = unsharded
 
     @property
     def n_records(self) -> int:
@@ -124,6 +130,51 @@ class TraceChunk:
             kind=self.site.kind,
             program_id=tuple(int(x) for x in self.pids[i]),
             touches=self.record_touches(i),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardInfo:
+    """Provenance of one collection shard (a contiguous sampled-grid run).
+
+    ``lo``/``hi`` index into the row-major *sampled* grid (the rows of
+    ``sampled_grid_array``), not the raw grid — a shard owns programs
+    ``sampled[lo:hi]``.  Persisted verbatim into session artifacts so a
+    later process can audit exactly which worker produced which records
+    (and which shard dropped what).
+    """
+
+    shard: int
+    lo: int
+    hi: int
+    programs: int
+    records: int
+    dropped: int
+    wall_s: float = 0.0
+
+    def as_dict(self) -> dict:
+        """JSON-ready form (session manifests, report bundles)."""
+        return {
+            "shard": self.shard,
+            "lo": self.lo,
+            "hi": self.hi,
+            "programs": self.programs,
+            "records": self.records,
+            "dropped": self.dropped,
+            "wall_s": self.wall_s,
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ShardInfo":
+        """Inverse of :meth:`as_dict` (artifact loaders)."""
+        return cls(
+            shard=int(d["shard"]),
+            lo=int(d["lo"]),
+            hi=int(d["hi"]),
+            programs=int(d["programs"]),
+            records=int(d["records"]),
+            dropped=int(d["dropped"]),
+            wall_s=float(d.get("wall_s", 0.0)),
         )
 
 
@@ -244,10 +295,13 @@ class TraceBuffer:
 
     _group_counter = itertools.count(1)
 
-    def __init__(self, max_records: int = 2_000_000):
+    def __init__(
+        self, max_records: int = 2_000_000, shard_id: Optional[int] = None
+    ):
         self.chunks: List[TraceChunk] = []
         self.regions: dict[str, RegionInfo] = {}
         self.max_records = max_records
+        self.shard_id = shard_id
         self.dropped = 0
         self._n_records = 0
         self._pending: List[AccessRecord] = []
@@ -300,7 +354,7 @@ class TraceBuffer:
                 words = np.empty(0, dtype=np.int64)
             self.chunks.append(
                 TraceChunk(site=site, pids=pids, tags=tags, words=words,
-                           ptr=ptr, group=None)
+                           ptr=ptr, group=None, shard=self.shard_id)
             )
 
         for rec in pending:
@@ -361,9 +415,71 @@ class TraceBuffer:
                 words=np.asarray(words, dtype=np.int64),
                 ptr=None if ptr is None else np.asarray(ptr, dtype=np.int64),
                 group=group,
+                shard=self.shard_id,
             )
         )
         self._n_records += p
+
+    # -- compaction --------------------------------------------------------
+    def consolidate(self, min_chunks: int = 32) -> None:
+        """Pack runs of small same-(site, group) broadcast chunks into one
+        CSR chunk each.
+
+        Kernels whose programs map to mostly-distinct block keys (e.g. a
+        row-per-program GEMM) emit one tiny broadcast chunk per key;
+        per-chunk costs (pickling across a shard-pool boundary, the
+        Analyzer's per-chunk flush loop) then dominate the actual data.
+        Consolidation is exact: the CSR chunk carries the same records,
+        the same per-record touch sets, and the same ``group`` token
+        (pid disjointness and touch uniqueness are per-token invariants,
+        unaffected by chunk packing).  Sites with fewer than
+        ``min_chunks`` chunks are left alone — consolidating two big
+        broadcast chunks would only duplicate their shared touch sets.
+        """
+        self._flush_pending()
+        runs: dict[Tuple, List[TraceChunk]] = {}
+        for chunk in self.chunks:
+            if chunk.ptr is not None or chunk.group is None:
+                continue
+            key = (chunk.site, chunk.group, chunk.shard, chunk.pids.shape[1])
+            runs.setdefault(key, []).append(chunk)
+        merged: dict[int, TraceChunk] = {}
+        drop: set = set()
+        for (site, group, shard, _), chunks in runs.items():
+            if len(chunks) < min_chunks:
+                continue
+            # CSR expands each record's touch set; only worth it when
+            # chunks are record-thin (the one-chunk-per-key pattern)
+            if sum(c.n_records for c in chunks) > 2 * len(chunks):
+                continue
+            pids = np.concatenate([c.pids for c in chunks])
+            counts = np.concatenate(
+                [
+                    np.full(c.n_records, c.tags.shape[0], dtype=np.int64)
+                    for c in chunks
+                ]
+            )
+            ptr = np.zeros(pids.shape[0] + 1, dtype=np.int64)
+            np.cumsum(counts, out=ptr[1:])
+            tags = np.concatenate(
+                [np.tile(c.tags, c.n_records) for c in chunks]
+            )
+            words = np.concatenate(
+                [np.tile(c.words, c.n_records) for c in chunks]
+            )
+            csr = TraceChunk(
+                site=site, pids=pids, tags=tags, words=words,
+                ptr=ptr, group=group, shard=shard,
+            )
+            merged[id(chunks[0])] = csr
+            drop.update(id(c) for c in chunks)
+        if not merged:
+            return
+        self.chunks = [
+            merged.get(id(c), c)
+            for c in self.chunks
+            if id(c) not in drop or id(c) in merged
+        ]
 
     # -- views -------------------------------------------------------------
     @property

@@ -289,10 +289,30 @@ def resolve(ref: str) -> Tuple[RegistryEntry, KernelVariant]:
     return entry, entry.variant(variant or None)
 
 
+def build(
+    ref: str,
+) -> Tuple[KernelSpec, Optional[Dict[str, np.ndarray]]]:
+    """Resolve + build a profile-ready (spec, dynamic_context) pair.
+
+    The returned spec is *source-stamped* with its canonical
+    ``name:variant`` ref, which is what lets a ``ShardedCollector``
+    worker rebuild the identical spec (and seeded context) in another
+    process — the spec object itself holds index-map lambdas and cannot
+    be pickled.  Deterministic: two ``build`` calls for the same ref
+    produce specs that collect bit-identical traces.
+    """
+    entry, variant = resolve(ref)
+    spec = dataclasses.replace(
+        variant.spec(), source=f"{entry.name}:{variant.name}"
+    )
+    return spec, variant.dynamic_context()
+
+
 __all__ = [
     "KernelVariant",
     "REGISTRY",
     "RegistryEntry",
+    "build",
     "flash", "gemm", "get", "gmm", "gramschm", "histogram", "names", "ops",
     "ref", "resolve", "spmv", "ssd", "ttm",
 ]

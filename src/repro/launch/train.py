@@ -22,6 +22,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config
+from repro.launch.mesh import mesh_axis_types
 from repro.data import DataConfig, SyntheticSource, TokenPipeline
 from repro.models import build_model
 from repro.optim import adamw, cosine_warmup
@@ -46,8 +47,7 @@ def make_mesh_from_devices():
     for m in range(int(n**0.5), 0, -1):
         if n % m == 0:
             return jax.make_mesh(
-                (n // m, m), ("data", "model"),
-                axis_types=(jax.sharding.AxisType.Auto,) * 2,
+                (n // m, m), ("data", "model"), **mesh_axis_types(2)
             )
     return None
 

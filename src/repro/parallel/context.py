@@ -55,9 +55,13 @@ def constrain_logical(x: jax.Array, logical_axes: Sequence[Optional[str]]):
 
 
 def _mesh_from_spec():
-    env = jax.sharding.get_abstract_mesh()
-    if env is not None and env.shape:
-        return env
+    # newer JAX: the abstract mesh of the enclosing use_mesh context
+    # (feature-detected — the pinned JAX predates get_abstract_mesh)
+    get_abstract_mesh = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get_abstract_mesh is not None:
+        env = get_abstract_mesh()
+        if env is not None and env.shape:
+            return env
     try:
         from jax._src import mesh as mesh_lib
 

@@ -101,6 +101,24 @@ def test_profile_writes_versioned_artifacts(tmp_path):
     assert manifest["version"] == ARTIFACT_VERSION
 
 
+def test_profile_workers_matches_serial(tmp_path, capsys):
+    """--workers 2 collects through the shard pool; the stored heat map
+    is bit-identical to the serial run and carries shard provenance."""
+    from repro.core.session import heatmaps_equal, load_iteration
+
+    sess = str(tmp_path / "sess")
+    assert cli.main(["profile", "--kernel", "ttm", "--out", sess,
+                     "--quiet"]) == 0
+    assert cli.main(["profile", "--kernel", "ttm", "--out", sess,
+                     "--workers", "2"]) == 0
+    out = capsys.readouterr().out
+    assert "collected in 2 shards" in out
+    serial = load_iteration(os.path.join(sess, "iter0")).kernel("ttm")
+    sharded = load_iteration(os.path.join(sess, "iter1")).kernel("ttm")
+    assert serial.shards == () and len(sharded.shards) == 2
+    assert heatmaps_equal(serial.heatmap, sharded.heatmap)
+
+
 def test_region_map_automatic_from_registry(tmp_path, capsys):
     # the registry knows gramschm's optimization renames q -> qT; the
     # stored rename makes the diff align without any --region-map flag

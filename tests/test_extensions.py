@@ -62,10 +62,11 @@ def test_constrain_logical_annotates_under_mesh():
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, json
+from repro.launch.mesh import mesh_axis_types
 from repro.parallel.context import use_rules, constrain_logical
 from repro.parallel.sharding import make_rules
 mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+                     **mesh_axis_types(2))
 rules = make_rules()
 with mesh, use_rules(rules):
     def f(x):
@@ -90,6 +91,7 @@ def test_ep_two_axis_expert_sharding_parity():
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, json
+from repro.launch.mesh import mesh_axis_types
 from repro.models.moe import MoEConfig, moe_defs, moe_apply_ep, moe_ref
 from repro.models.params import init_params
 from repro.parallel.context import use_rules
@@ -100,7 +102,7 @@ params = init_params(moe_defs(cfg), jax.random.key(0))
 x = jax.random.normal(jax.random.key(1), (4, 8, 16))
 y_ref, _ = moe_ref(params, x, cfg)
 mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+                     **mesh_axis_types(2))
 rules = make_rules(expert_axes=("model", "data"))  # 8 experts over 8 chips
 with mesh, use_rules(rules):
     y, aux = jax.jit(lambda p, x: moe_apply_ep(p, x, cfg))(params, x)

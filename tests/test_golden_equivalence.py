@@ -237,3 +237,187 @@ def test_mixed_buffer_ingest_equivalence():
     ran.ingest(ref1)
     ran.ingest(ref2)
     assert_heatmaps_identical(an.flush(), ran.flush())
+
+
+# ---------------------------------------------------------------------------
+# merge algebra: any partition of a trace into shards merges bit-identically
+# ---------------------------------------------------------------------------
+
+
+def _shard_cases():
+    """Kernel cases exercising every collector path under sharding:
+    static broadcast operands, once= single-program stores, scratch
+    accumulators, and dynamic (Level-2) CSR operands."""
+    from repro.kernels.gemm import gemm_v00_spec, gemm_v01_spec
+    from repro.kernels.histogram import hist_naive_spec, hist_opt2_spec
+    from repro.kernels.spmv import spmv_csr_spec
+    from repro.kernels.ttm import ttm_scratch_spec
+
+    rng = np.random.default_rng(17)
+    return [
+        (gemm_v00_spec(256, 256, 256), None),
+        (gemm_v01_spec(256, 256, 256), None),
+        (ttm_scratch_spec(256, 8, 32), None),
+        (hist_opt2_spec(16384, 512), None),  # once= final store
+        (hist_naive_spec(8192, 512, block=1024),
+         {"cells": rng.integers(0, 512, size=8192).astype(np.int64)}),
+        (spmv_csr_spec(4096, 2048, block_rows=512),
+         {"col_indices": rng.integers(0, 2048, size=4096).astype(np.int32)}),
+    ]
+
+
+def _partition_merge(spec, ctx, bounds, sampler=None):
+    """Collect each [lo, hi) shard, unify tokens, flush ONE analyzer."""
+    from repro.core.collector import _unify_shard_groups, collect_shard
+
+    sampler = sampler or GridSampler(None)
+    results = [
+        collect_shard(spec, sampler, ctx, lo, hi, i)
+        for i, (lo, hi) in enumerate(bounds)
+    ]
+    bufs = [b for b, _ in results]
+    _unify_shard_groups(bufs)
+    an = Analyzer(spec.name, spec.grid, sampler.describe())
+    for buf in bufs:
+        an.ingest(buf)
+    return an.flush()
+
+
+def _heatmap_merge(spec, ctx, bounds, sampler=None):
+    """Flush each shard with key state, fold through Heatmap.merge."""
+    from repro.core.collector import collect_shard
+
+    sampler = sampler or GridSampler(None)
+    merged = None
+    for i, (lo, hi) in enumerate(bounds):
+        buf, _ = collect_shard(spec, sampler, ctx, lo, hi, i)
+        an = Analyzer(spec.name, spec.grid, sampler.describe())
+        an.ingest(buf)
+        hm = an.flush(keep_keys=True)
+        merged = hm if merged is None else merged.merge(hm)
+    return merged
+
+
+def _strip_keys(hm):
+    """Key state is an internal carrier; compare the flushed arrays."""
+    for rh in hm.regions:
+        rh.key_state = None
+    return hm
+
+
+@pytest.mark.parametrize("n_shards", [2, 3, 5])
+def test_partitioned_chunk_merge_bit_identical(n_shards):
+    """Sharded chunk-level merge == serial single pass, every case."""
+    from repro.core.collector import shard_bounds
+
+    for spec, ctx in _shard_cases():
+        serial = analyze(spec, GridSampler(None), dynamic_context=ctx)
+        total = int(np.prod(spec.grid))
+        sharded = _partition_merge(
+            spec, ctx, shard_bounds(total, n_shards)
+        )
+        assert_heatmaps_identical(sharded, serial)
+
+
+def test_partitioned_heatmap_merge_bit_identical():
+    """Heatmap.merge over key-state shards == serial single pass."""
+    from repro.core.collector import shard_bounds
+
+    for spec, ctx in _shard_cases():
+        serial = analyze(spec, GridSampler(None), dynamic_context=ctx)
+        total = int(np.prod(spec.grid))
+        merged = _heatmap_merge(spec, ctx, shard_bounds(total, 3))
+        assert_heatmaps_identical(_strip_keys(merged), serial)
+
+
+def test_uneven_partition_merge_bit_identical():
+    """Degenerate partitions (empty and single-program shards) merge
+    exactly too — the monoid has an identity."""
+    from repro.kernels.gemm import gemm_v00_spec
+
+    spec = gemm_v00_spec(128, 128, 128)
+    serial = analyze(spec, GridSampler(None))
+    bounds = [(0, 0), (0, 1), (1, 1), (1, 128)]
+    assert_heatmaps_identical(_partition_merge(spec, None, bounds), serial)
+    assert_heatmaps_identical(
+        _strip_keys(_heatmap_merge(spec, None, bounds)), serial
+    )
+
+
+def test_overlapping_heatmap_merge_is_union_not_sum():
+    """Merging OVERLAPPING shards must union contributors, not add
+    temperatures — the defining property of the merge algebra."""
+    from repro.kernels.gemm import gemm_v01_spec
+
+    spec = gemm_v01_spec(256, 256, 256)
+    # the same full grid twice: union == one pass, sum would double
+    full = [(0, int(np.prod(spec.grid)))] * 2
+    serial = analyze(spec, GridSampler(None))
+    merged = _heatmap_merge(spec, None, full)
+    assert merged.n_records == 2 * serial.n_records  # records DO add
+    for name in serial.region_names():  # temperatures do NOT
+        np.testing.assert_array_equal(
+            merged.region(name).word_temps_matrix,
+            serial.region(name).word_temps_matrix,
+        )
+        np.testing.assert_array_equal(
+            merged.region(name).sector_temps_array,
+            serial.region(name).sector_temps_array,
+        )
+
+
+def test_sharded_collector_inprocess_bit_identical():
+    """The ShardedCollector fallback (no registry source) end to end."""
+    from repro.core.collector import ShardedCollector
+
+    for spec, ctx in _shard_cases():
+        serial = analyze(spec, GridSampler(None), dynamic_context=ctx)
+        with ShardedCollector(3) as sc:
+            sharded = sc.analyze(spec, GridSampler(None), ctx)
+        assert len(sharded.shards) == 3
+        assert sum(s.programs for s in sharded.shards) == int(
+            np.prod(spec.grid)
+        )
+        assert_heatmaps_identical(sharded, serial)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # property tests degrade to the deterministic ones
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+
+    @st.composite
+    def _partitions(draw, total):
+        """A random contiguous partition of range(total) into shards."""
+        n_cuts = draw(st.integers(min_value=0, max_value=min(6, total)))
+        cuts = sorted(
+            draw(
+                st.lists(
+                    st.integers(min_value=0, max_value=total),
+                    min_size=n_cuts,
+                    max_size=n_cuts,
+                )
+            )
+        )
+        edges = [0] + cuts + [total]
+        return list(zip(edges[:-1], edges[1:]))
+
+    @given(data=st.data(), case=st.integers(min_value=0, max_value=5))
+    @settings(max_examples=20, deadline=None)
+    def test_any_partition_merges_bit_identically(data, case):
+        """PROPERTY: for ANY contiguous partition of the sampled grid,
+        both merge paths reproduce the single-pass heat map exactly."""
+        spec, ctx = _shard_cases()[case]
+        total = int(np.prod(spec.grid))
+        bounds = data.draw(_partitions(total))
+        serial = analyze(spec, GridSampler(None), dynamic_context=ctx)
+        assert_heatmaps_identical(
+            _partition_merge(spec, ctx, bounds), serial
+        )
+        assert_heatmaps_identical(
+            _strip_keys(_heatmap_merge(spec, ctx, bounds)), serial
+        )

@@ -172,6 +172,70 @@ def test_diff_region_map_renames(tmp_path):
     assert ("q", "strided") in v.diff.fixed
 
 
+# -- sharded profiling ------------------------------------------------------
+
+
+def test_workers2_session_end_to_end_with_shard_provenance(tmp_path):
+    """workers=2 profile -> artifact -> reload: bit-identical heat map
+    AND intact per-shard provenance after the round trip."""
+    from repro import kernels as kreg
+
+    spec, ctx = kreg.build("gemm:v01")
+    serial = ProfileSession(tmp_path / "serial").profile(
+        [spec], dynamic_contexts={spec.name: ctx} if ctx else None
+    )
+    sess = ProfileSession(tmp_path / "sess", workers=2)
+    it = sess.profile(
+        [spec], dynamic_contexts={spec.name: ctx} if ctx else None
+    )
+    (pk,) = it.kernels
+    # provenance: two shards partitioning the sampled grid exactly
+    assert len(pk.shards) == 2
+    assert pk.shards[0].lo == 0
+    assert pk.shards[0].hi == pk.shards[1].lo
+    assert sum(s.programs for s in pk.shards) == int(
+        np.prod(pk.heatmap.grid)
+    )
+    assert sum(s.records for s in pk.shards) == pk.heatmap.n_records
+    # sharded == serial, bit for bit
+    assert heatmaps_equal(pk.heatmap, serial.kernels[0].heatmap)
+    # round trip: a fresh loader sees the same shards
+    re = load_iteration(it.path).kernels[0]
+    assert re.shards == pk.shards
+    assert heatmaps_equal(re.heatmap, pk.heatmap)
+    # and the manifest carries them as plain JSON
+    manifest = json.loads((it.path / "manifest.json").read_text())
+    stored = manifest["kernels"][0]["heatmap"]["shards"]
+    assert [s["shard"] for s in stored] == [0, 1]
+
+
+def test_v1_artifact_still_loads(tmp_path):
+    """The v2 loader reads v-previous artifacts (no shard provenance)."""
+    from repro.core.session import SUPPORTED_VERSIONS
+
+    assert 1 in SUPPORTED_VERSIONS and ARTIFACT_VERSION == 2
+    path = write_iteration(tmp_path / "iter0", [_profiled()])
+    mpath = path / "manifest.json"
+    manifest = json.loads(mpath.read_text())
+    # rewrite as a faithful v1 artifact: old stamp, no shards key
+    manifest["version"] = 1
+    for entry in manifest["kernels"]:
+        entry["heatmap"].pop("shards", None)
+    mpath.write_text(json.dumps(manifest))
+    it = load_iteration(path)
+    assert it.kernels[0].shards == ()
+    assert heatmaps_equal(it.kernels[0].heatmap, _profiled().heatmap)
+
+
+def test_v1_session_json_still_opens(tmp_path):
+    sess = ProfileSession(tmp_path / "sess")
+    spath = tmp_path / "sess" / "session.json"
+    manifest = json.loads(spath.read_text())
+    manifest["version"] = 1
+    spath.write_text(json.dumps(manifest))
+    ProfileSession(tmp_path / "sess", create=False)  # must not raise
+
+
 # -- version stamp ----------------------------------------------------------
 
 

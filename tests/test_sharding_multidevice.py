@@ -17,6 +17,7 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
+from repro.launch.mesh import mesh_axis_types
 from repro.parallel.sharding import Rules, fixup_specs, make_rules, specs_from_logical
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -41,8 +42,7 @@ def test_extra_rules_take_precedence():
 
 
 def test_fixup_drops_nondivisible():
-    mesh = jax.make_mesh((1,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = jax.make_mesh((1,), ("model",), **mesh_axis_types(1))
     # fake a 16-wide model axis via a Mesh-like shim
     class FakeMesh:
         shape = {"model": 16, "data": 16}
@@ -60,6 +60,7 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np, json
 from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.launch.mesh import mesh_axis_types
 """
 
 
@@ -100,7 +101,7 @@ def test_sharded_train_step_matches_single_device():
 
     # 8-device (2 data x 4 model) mesh
     mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+                         **mesh_axis_types(2))
     rules = make_rules()
     pspecs = fixup_specs(specs_from_logical(m.logical_specs(), rules), params, mesh)
     psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
@@ -132,7 +133,7 @@ def test_ep_moe_matches_reference_on_mesh():
     y_ref, aux_ref = moe_ref(params, x, cfg)
 
     mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+                         **mesh_axis_types(2))
     rules = make_rules()
     with mesh, use_rules(rules):
         y, aux = jax.jit(lambda p, x: moe_apply_ep(p, x, cfg))(params, x)
@@ -147,7 +148,7 @@ def test_pipeline_parallel_matches_sequential():
     from repro.parallel.pipeline import pipeline, bubble_fraction
 
     mesh = jax.make_mesh((4,), ("stage",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+                         **mesh_axis_types(1))
     n_stages, n_micro, dim = 4, 8, 16
     ws = jax.random.normal(jax.random.key(0), (n_stages, dim, dim)) * 0.3
     mbs = jax.random.normal(jax.random.key(1), (n_micro, 4, dim))
