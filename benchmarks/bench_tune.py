@@ -1,0 +1,154 @@
+"""Autotuner benchmark: close the tuning loop unattended per family.
+
+The paper's headline result (up to 721.79% speedup) comes from walking
+the profile -> optimize -> re-profile loop by hand; ``repro.core.tuner``
+walks it programmatically.  This bench runs ``tune`` from the naive
+variant of every laddered kernel family and records, per family:
+
+* modeled-transaction speedup of the winning variant (the Table III
+  currency),
+* which patterns the trajectory fixed,
+* how many candidates the budget bought and the wall time spent.
+
+The acceptance bar mirrors the repo's tuning-loop contract: at least
+**3 families** must end on a variant with strictly fewer sector
+transactions AND at least one fixed pattern — fully unattended.
+
+Machine-readable output: every ``__main__`` run (and
+``benchmarks/run.py``) writes ``BENCH_tune.json`` — per-family speedup,
+candidates tried, wall time, full step trajectories, git sha.
+
+Usage:
+    PYTHONPATH=src python benchmarks/bench_tune.py            # all families
+    PYTHONPATH=src python benchmarks/bench_tune.py --smoke    # CI subset
+    PYTHONPATH=src python benchmarks/bench_tune.py --budget 4
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+#: Ladder families the unattended loop is expected to close.  (cuszp,
+#: flash, gmm and ssd have single-variant ladders — the tuner still
+#: runs on them, but they are not part of the acceptance bar.)
+FAMILIES = ("gemm", "spmv", "histogram", "gramschm", "ttm")
+
+#: Families the CI smoke subset tunes (small grids, < 1 s each).
+SMOKE_FAMILIES = ("gemm", "gramschm", "ttm")
+
+#: Minimum count of families that must reach strictly fewer sector
+#: transactions with at least one fixed pattern.  (The smoke subset
+#: includes ttm, whose register-fusion fix keeps HBM traffic equal by
+#: design, so its bar is one lower.)
+MIN_CLOSED = 3
+MIN_CLOSED_SMOKE = 2
+
+
+def run(
+    families: Tuple[str, ...] = FAMILIES,
+    budget: int = 6,
+    seed: int = 0,
+    min_closed: int = MIN_CLOSED,
+) -> Tuple[List[Tuple[str, float, str]], List[dict]]:
+    """Tune every family; returns (printed rows, trajectory dicts)."""
+    from repro.core.tuner import tune
+
+    rows: List[Tuple[str, float, str]] = []
+    results: List[dict] = []
+    print("family,speedup,candidates,fixed,converged,wall_s")
+    for fam in families:
+        res = tune(fam, budget=budget, seed=seed)
+        d = res.as_dict()
+        results.append(d)
+        fixed = ";".join(f"{p}@{r}" for r, p in res.fixed_patterns) or "-"
+        print(
+            f"{fam},{res.speedup:.2f}x,{len(res.steps)},{fixed},"
+            f"{res.converged},{res.wall_s:.2f}"
+        )
+        rows.append(
+            (
+                f"tune_{fam}_speedup",
+                res.speedup,
+                f"{res.baseline.transactions}->{res.best.transactions} "
+                f"transfers via {res.best_label} "
+                f"({len(res.steps)} candidates, "
+                f"{len(res.fixed_patterns)} patterns fixed)",
+            )
+        )
+    closed = sum(
+        1 for d in results if d["improved"] and d["fixed"]
+    )
+    target = min(min_closed, len(families))
+    rows.append(
+        (
+            "tune_families_closed",
+            float(closed),
+            f"families ending with strictly fewer transactions AND a "
+            f"fixed pattern (target >= {target})",
+        )
+    )
+    if closed < target:
+        import sys
+
+        print(
+            f"WARNING: only {closed} families closed the loop "
+            f"(target {target}) — tuning-loop regression",
+            file=sys.stderr,
+        )
+    return rows, results
+
+
+def write_bench_json(
+    rows: List[Tuple[str, float, str]],
+    results: List[dict],
+    path: str = "BENCH_tune.json",
+    extra: Optional[dict] = None,
+) -> str:
+    """Write the machine-readable record (BENCH_tune.json).
+
+    Delegates the envelope (metrics map, git sha, wall-clock stamp) to
+    ``bench_overhead.write_bench_json`` — one writer, two records —
+    overriding the bench tag and attaching the full per-family
+    trajectories.
+    """
+    try:  # package import (benchmarks/run.py) vs direct-script run
+        from benchmarks.bench_overhead import write_bench_json as _record
+    except ImportError:
+        from bench_overhead import write_bench_json as _record
+    payload_extra = {"bench": "tune", "families": results}
+    payload_extra.update(extra or {})
+    return _record(rows, path, extra=payload_extra)
+
+
+def run_all(
+    smoke: bool = False,
+    budget: int = 6,
+    seed: int = 0,
+    json_path: Optional[str] = "BENCH_tune.json",
+) -> List[Tuple[str, float, str]]:
+    """Whole tuning bench + the machine-readable record."""
+    families = SMOKE_FAMILIES if smoke else FAMILIES
+    rows, results = run(
+        families=families, budget=budget, seed=seed,
+        min_closed=MIN_CLOSED_SMOKE if smoke else MIN_CLOSED,
+    )
+    if json_path:
+        write_bench_json(
+            rows, results, json_path,
+            extra={"smoke": smoke, "budget": budget, "seed": seed},
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI subset (3 fast families)")
+    ap.add_argument("--budget", type=int, default=6,
+                    help="candidate re-profiles per family (default: 6)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="candidate tie-break seed")
+    args = ap.parse_args()
+    run_all(smoke=args.smoke, budget=args.budget, seed=args.seed)

@@ -3,10 +3,11 @@
     PYTHONPATH=src python -m benchmarks.run
 
 Prints ``name,us_per_call,derived`` CSV rows per bench, as required,
-and writes ``BENCH_collect.json`` — the machine-readable record of the
-collection benchmarks (throughput, wall times, shard count, git sha) —
-so the BENCH_* trajectory can be tracked across commits without
-scraping stdout.
+and writes the machine-readable records — ``BENCH_collect.json`` for
+the collection benchmarks (throughput, wall times, shard count, git
+sha) and ``BENCH_tune.json`` for the autotuner loop (per-family
+speedups, candidates tried, trajectories) — so the BENCH_* trajectory
+can be tracked across commits without scraping stdout.
 """
 
 from __future__ import annotations
@@ -15,7 +16,13 @@ import sys
 
 
 def main() -> None:
-    from benchmarks import bench_overhead, bench_patterns, bench_roofline, bench_speedup
+    from benchmarks import (
+        bench_overhead,
+        bench_patterns,
+        bench_roofline,
+        bench_speedup,
+        bench_tune,
+    )
 
     rows = []
     for name, runner in (
@@ -24,6 +31,8 @@ def main() -> None:
         # it also writes the BENCH_collect.json record
         ("overhead (paper Table II)", bench_overhead.run_all),
         ("speedup (paper Table III)", bench_speedup.run),
+        # closes the tuning loop per family; writes BENCH_tune.json
+        ("autotuner (closed loop)", bench_tune.run_all),
         ("roofline (§Roofline)", bench_roofline.run),
     ):
         print(f"\n===== {name} =====")

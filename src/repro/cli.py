@@ -10,6 +10,9 @@ Subcommands (see ``docs/cli.md`` for transcripts):
   gallery + markdown digest + CSVs) for a stored iteration.
 * ``cuthermo diff sess/iter0 sess/iter1`` — align two iterations and
   print per-kernel improved/regressed/fixed-pattern verdicts.
+* ``cuthermo tune gemm --out sess/`` — close the loop unattended: map
+  advisor actions to candidate variants, re-profile, keep improvements,
+  repeat until the patterns are fixed or the budget runs out.
 
 Heavy imports (numpy, jax-backed kernel modules) happen inside the
 subcommand handlers, so ``cuthermo --help`` stays instant.
@@ -123,6 +126,80 @@ def _build_parser() -> argparse.ArgumentParser:
         help="exit 1 when any kernel regressed (CI gating)",
     )
     df.set_defaults(func=_cmd_diff)
+
+    tn = sub.add_parser(
+        "tune",
+        help="autotune kernels: profile, apply advisor actions, re-profile",
+    )
+    tn.add_argument(
+        "kernel",
+        nargs="+",
+        metavar="NAME[:VARIANT]",
+        help="kernel families to tune (the given variant is the starting "
+        "rung; default: the family's baseline)",
+    )
+    tn.add_argument(
+        "--budget",
+        "-b",
+        type=int,
+        default=None,  # resolved to tuner.DEFAULT_BUDGET in the handler
+        metavar="N",
+        help="max candidate re-profiles per family (default: 8)",
+    )
+    tn.add_argument(
+        "--workers",
+        "-w",
+        type=int,
+        default=1,
+        metavar="N",
+        help="shard candidate profiling across N worker processes "
+        "(registry-buildable candidates only; generated candidates "
+        "collect in-process)",
+    )
+    tn.add_argument(
+        "--target-pattern",
+        action="append",
+        default=[],
+        metavar="PATTERN",
+        # repro.core.patterns.ALL_PATTERNS, inlined so --help needs no
+        # numpy import; a typo must fail loudly, not tune nothing
+        choices=(
+            "hot", "hot-random", "scratch-abuse", "false-sharing",
+            "misalignment", "strided",
+        ),
+        help="only chase actions for this pattern (repeatable): hot, "
+        "hot-random, false-sharing, misalignment, strided, scratch-abuse",
+    )
+    tn.add_argument(
+        "--out",
+        "-o",
+        default="cuthermo-session",
+        metavar="DIR",
+        help="session directory the trajectory is persisted into "
+        "(default: ./cuthermo-session)",
+    )
+    tn.add_argument(
+        "--seed",
+        type=int,
+        default=0,
+        help="candidate tie-break seed (same seed => same trajectory)",
+    )
+    tn.add_argument(
+        "--no-generated",
+        action="store_true",
+        help="only try registry ladder variants, no generated candidates",
+    )
+    tn.add_argument(
+        "--report",
+        action="store_true",
+        help="write the report bundle (with the tuning trajectory) to "
+        "<out>/report afterwards",
+    )
+    tn.add_argument(
+        "--quiet", "-q", action="store_true",
+        help="suppress per-step progress lines",
+    )
+    tn.set_defaults(func=_cmd_tune)
     return p
 
 
@@ -283,22 +360,103 @@ def _resolve_iteration_dir(path: str):
 
 def _cmd_report(args: argparse.Namespace) -> int:
     """Handler for ``cuthermo report``."""
+    import dataclasses
     import os
 
     from repro.core.render import ReportEntry, write_report_bundle
-    from repro.core.session import SessionError
+    from repro.core.session import ProfileSession, SessionError
 
     try:
         it = _resolve_iteration_dir(args.iteration)
     except SessionError as e:
         print(f"cuthermo: {e}", file=sys.stderr)
         return 2
-    entries = [ReportEntry.from_profiled(pk) for pk in it.kernels]
+    # pointed at a session root: recover any stored tuning trajectories
+    # (v3 provenance) so the bundle gets its trajectory section, and
+    # render each tuning run's WINNING iteration as the report body
+    # (the latest iteration may well be a rejected candidate)
+    tuning = None
+    kernels = list(it.kernels)
+    if os.path.isfile(os.path.join(args.iteration, "session.json")):
+        from repro.core.session import load_iteration
+        from repro.core.tuner import trajectories_from_session
+
+        sess = ProfileSession(args.iteration, create=False)
+        tuning = trajectories_from_session(sess) or None
+        # swap the report body to each run's winner ONLY when the
+        # resolved latest iteration is itself part of a tuning run —
+        # plain profiles appended after a tune must stay the body
+        if tuning and it.tuning is not None:
+            best = []
+            for traj in tuning:
+                name = traj["best"].get("iteration")
+                try:
+                    best.extend(load_iteration(sess.root / name).kernels)
+                except (SessionError, TypeError):
+                    best = []  # incomplete provenance: keep the default
+                    break
+            if best:
+                kernels = best
+                it = dataclasses.replace(it, label=f"{it.label} (tuned)")
+    entries = [ReportEntry.from_profiled(pk) for pk in kernels]
     out = args.out or os.path.join(str(it.path), "report")
     title = args.title or f"cuthermo report — {it.label}"
-    written = write_report_bundle(entries, out, title=title)
+    written = write_report_bundle(entries, out, title=title, tuning=tuning)
     print(f"wrote {written['index.html']}")
     print(f"wrote {written['report.md']}")
+    return 0
+
+
+def _cmd_tune(args: argparse.Namespace) -> int:
+    """Handler for ``cuthermo tune``."""
+    import os
+
+    from repro.core.session import ProfileSession, SessionError
+    from repro.core.tuner import DEFAULT_BUDGET, TuneError
+
+    try:
+        sess = ProfileSession(args.out)
+    except SessionError as e:
+        print(f"cuthermo: {e}", file=sys.stderr)
+        return 2
+    progress = None if args.quiet else (lambda msg: print(f"  {msg}"))
+    budget = DEFAULT_BUDGET if args.budget is None else max(0, args.budget)
+    results = []
+    for ref in args.kernel:
+        if not args.quiet:
+            print(f"# tuning {ref}")
+        try:
+            res = sess.tune(
+                ref,
+                budget=budget,
+                target_patterns=args.target_pattern or None,
+                seed=args.seed,
+                use_generated=not args.no_generated,
+                workers=max(1, args.workers),
+                progress=progress,
+            )
+        except (TuneError, SessionError) as e:
+            print(f"cuthermo: {e}", file=sys.stderr)
+            return 2
+        results.append(res)
+        print(res.summary())
+        print()
+    if args.report:
+        from repro.core.render import ReportEntry, write_report_bundle
+
+        written = write_report_bundle(
+            [ReportEntry.from_profiled(r.best) for r in results],
+            os.path.join(args.out, "report"),
+            title="cuthermo tune report",
+            tuning=[r.as_dict() for r in results],
+        )
+        print(f"wrote {written['index.html']}")
+    improved = sum(1 for r in results if r.improved)
+    fixed = sum(len(r.fixed_patterns) for r in results)
+    print(
+        f"tuned {len(results)} kernel(s): {improved} improved, "
+        f"{fixed} patterns fixed (trajectory in {sess.root})"
+    )
     return 0
 
 

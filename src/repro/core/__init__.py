@@ -10,7 +10,9 @@ Public API lives in ``repro.core.api`` (also re-exported here).
 
 from . import advisor, api, collector, diff as diff_mod, heatmap, hlo_cost
 from . import hlo_thermo, patterns, render, roofline, session, tiles, trace
+from . import tuner
 from .diff import HeatmapDiff, diff
+from .tuner import Candidate, TuneResult, TuneStep, tune
 from .api import (
     actions,
     advise,
@@ -38,6 +40,7 @@ from .trace import GridSampler, KernelWhitelist, TraceBuffer
 
 __all__ = [
     "Analyzer",
+    "Candidate",
     "GridSampler",
     "HeatKeys",
     "Heatmap",
@@ -48,6 +51,8 @@ __all__ = [
     "SessionError",
     "ShardInfo",
     "ShardedCollector",
+    "TuneResult",
+    "TuneStep",
     "diff",
     "hlo_cost",
     "KernelSpec",
@@ -78,4 +83,6 @@ __all__ = [
     "session",
     "tiles",
     "trace",
+    "tune",
+    "tuner",
 ]

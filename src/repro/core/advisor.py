@@ -27,7 +27,29 @@ from .patterns import (
 
 @dataclasses.dataclass(frozen=True)
 class Action:
-    """One concrete optimization step."""
+    """One concrete optimization step the profile recommends.
+
+    An Action names the Pallas knob to turn for one detected pattern:
+
+    * ``kind`` — the knob vocabulary: ``'retile'`` (false sharing),
+      ``'transpose'`` (strided), ``'pad_align'`` (misalignment),
+      ``'drop_scratch'`` (scratch abuse), ``'vmem_pin'`` (hot) or
+      ``'reorder_grid'`` (hot-random).
+    * ``region`` / ``pattern`` — which buffer, diagnosed with what (see
+      ``docs/patterns.md`` for the catalogue).
+    * ``est_transaction_saving`` — the fraction of the kernel's modeled
+      HBM<->VMEM transfers this step is expected to remove, priced with
+      the same transaction model the heat map uses; ``advise`` sorts on
+      it and the autotuner uses it as the candidate trial order.
+    * ``params`` — machine-readable knob hints (e.g. the suggested block
+      sublane multiple, the strided word offset) as (key, value) pairs.
+
+    Actions are the tuner's input: ``repro.core.tuner`` expands every
+    kind into profile-ready candidate specs
+    (``tuner.candidates_for_action``) plus the registry's hand-written
+    ladder steps, which is what closes the paper's profile -> optimize
+    -> re-profile loop unattended (``cuthermo tune``).
+    """
 
     kind: str  # 'retile' | 'reorder_grid' | 'transpose' | 'drop_scratch'
     #          | 'pad_align' | 'vmem_pin'
@@ -36,6 +58,14 @@ class Action:
     description: str
     est_transaction_saving: float  # fraction of region transactions saved
     params: Tuple[Tuple[str, str], ...] = ()
+
+    def summary(self) -> str:
+        """One-line human-readable form (reports, CLI, tuner progress)."""
+        return (
+            f"{self.kind}({self.region}): save "
+            f"~{100 * self.est_transaction_saving:.0f}% of transfers — "
+            f"{self.description}"
+        )
 
     def as_dict(self) -> dict:
         """JSON-ready view (session manifests, report bundles)."""
@@ -50,6 +80,7 @@ class Action:
 
 
 def _advise_one(rep: PatternReport, hm: Heatmap) -> Optional[Action]:
+    """Map one pattern report to its Action (None when not actionable)."""
     region_tx = hm.sector_transactions(rep.region)
     total_tx = max(1, hm.sector_transactions())
     weight = region_tx / total_tx
@@ -159,8 +190,5 @@ def format_report(hm: Heatmap) -> str:
     if acts:
         lines.append("-- suggested actions (by estimated saving) --")
         for a in acts:
-            lines.append(
-                f"  {a.kind}({a.region}): save ~{100*a.est_transaction_saving:.0f}% "
-                f"of transfers — {a.description}"
-            )
+            lines.append(f"  {a.summary()}")
     return "\n".join(lines)

@@ -20,7 +20,7 @@ import html as _html
 import io
 import os
 import re
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 from .advisor import Action
 from .heatmap import Heatmap, HeatRow, RegionHeatmap, compress_region
@@ -345,18 +345,92 @@ def _traffic_chart_svg(entries: Sequence[ReportEntry]) -> str:
     return "".join(rows)
 
 
+def _step_action_label(step: Mapping) -> str:
+    """Provenance label ('kind(region) <- pattern') of one step's spawner."""
+    action = (step.get("candidate") or {}).get("action") or {}
+    if not action:
+        return "—"
+    return (
+        f"{_html.escape(str(action.get('kind', '?')))}"
+        f"({_html.escape(str(action.get('region', '?')))}) "
+        f"&larr; {_html.escape(str(action.get('pattern', '?')))}"
+    )
+
+
+def _tuning_section_html(trajectories: Sequence[Mapping]) -> str:
+    """Tuning-trajectory section of the HTML bundle (one card per family).
+
+    ``trajectories`` are JSON-shaped trajectory dicts — exactly what
+    ``TuneResult.as_dict()`` produces, or what
+    ``repro.core.tuner.trajectories_from_session`` recovers from stored
+    v3 provenance.  Each card walks the steps: candidate, the advisor
+    action that spawned it, transfers, verdict, accepted/rejected.
+    """
+    if not trajectories:
+        return ""
+    parts = ["<h3>tuning trajectory</h3>"]
+    for t in trajectories:
+        base_tx = (t.get("baseline") or {}).get("transactions", 0)
+        best = t.get("best") or {}
+        run = t.get("run") or ""
+        title = str(t.get("kernel")) + (f" — {run}" if run else "")
+        parts.append(
+            f"<div class='card'><h4>{_html.escape(title)}"
+            f"</h4><p class='evidence'>baseline {base_tx} transfers "
+            f"&rarr; best <b>{_html.escape(str(best.get('label', '?')))}"
+            f"</b> {best.get('transactions', base_tx)} transfers "
+            f"({float(t.get('speedup', 1.0)):.2f}x modeled), "
+            f"{t.get('candidates_tried', len(t.get('steps', ())))} "
+            "candidates tried</p>"
+            "<table><tr><th>step</th><th>candidate</th>"
+            "<th>spawned by</th><th>transfers</th><th>verdict</th>"
+            "<th>fixed</th><th>kept</th></tr>"
+        )
+        for s in t.get("steps", ()):
+            cand = s.get("candidate") or {}
+            verdict = str(s.get("verdict", ""))
+            vclass = (
+                f" class='verdict-{verdict}'"
+                if verdict in ("improved", "regressed")
+                else ""
+            )
+            fixed = (
+                ", ".join(
+                    f"{_html.escape(str(p))} on {_html.escape(str(r))}"
+                    for r, p in s.get("fixed", ())
+                )
+                or "&mdash;"
+            )
+            parts.append(
+                f"<tr><td>{s.get('step')}</td>"
+                f"<td>{_html.escape(str(cand.get('label', '?')))}</td>"
+                f"<td>{_step_action_label(s)}</td>"
+                f"<td>{s.get('transactions')}</td>"
+                f"<td{vclass}>{_html.escape(verdict)}</td>"
+                f"<td>{fixed}</td>"
+                f"<td>{'accepted' if s.get('accepted') else 'rejected'}"
+                "</td></tr>"
+            )
+        parts.append("</table></div>")
+    return "".join(parts)
+
+
 def render_session_html(
     entries: Sequence[ReportEntry],
     title: str = "cuthermo report",
     max_runs_per_region: int = 64,
+    tuning: Optional[Sequence[Mapping]] = None,
 ) -> str:
     """Self-contained HTML gallery for one profiled iteration.
 
     Contains, for every entry: the per-region heat-map tables (compressed
     to at most ``max_runs_per_region`` runs), the detected patterns with
     their evidence lines, the advisor's actions, and at the top a summary
-    table plus the HBM-traffic placement chart.  The output embeds no
-    external resources — one file opens anywhere.
+    table plus the HBM-traffic placement chart.  ``tuning`` (trajectory
+    dicts from ``TuneResult.as_dict()`` /
+    ``tuner.trajectories_from_session``) adds a per-family tuning
+    trajectory section.  The output embeds no external resources — one
+    file opens anywhere.
     """
     parts: List[str] = [
         "<!doctype html><meta charset='utf-8'>",
@@ -390,6 +464,8 @@ def render_session_html(
             "bar sits on the achievable memory-roofline floor.</p>"
         )
         parts.append(chart)
+    if tuning:
+        parts.append(_tuning_section_html(tuning))
     # per-kernel sections
     for i, e in enumerate(entries):
         hm = e.heatmap
@@ -446,8 +522,45 @@ def render_session_html(
     return "".join(parts)
 
 
+def _tuning_section_markdown(trajectories: Sequence[Mapping]) -> List[str]:
+    """Markdown lines of the tuning-trajectory section (one table/family)."""
+    lines: List[str] = []
+    for t in trajectories:
+        base_tx = (t.get("baseline") or {}).get("transactions", 0)
+        best = t.get("best") or {}
+        lines += [
+            "",
+            f"## tuning trajectory — {t.get('kernel')}",
+            "",
+            f"baseline {base_tx} transfers → best "
+            f"`{best.get('label', '?')}` {best.get('transactions', base_tx)} "
+            f"transfers ({float(t.get('speedup', 1.0)):.2f}x modeled)",
+            "",
+            "| step | candidate | spawned by | transfers | verdict | kept |",
+            "|---:|---|---|---:|---|---|",
+        ]
+        for s in t.get("steps", ()):
+            cand = s.get("candidate") or {}
+            action = cand.get("action") or {}
+            spawner = (
+                f"{action.get('kind', '?')}({action.get('region', '?')}) "
+                f"← {action.get('pattern', '?')}"
+                if action
+                else "—"
+            )
+            lines.append(
+                f"| {s.get('step')} | `{cand.get('label', '?')}` "
+                f"| {spawner} | {s.get('transactions')} "
+                f"| {s.get('verdict', '')} "
+                f"| {'accepted' if s.get('accepted') else 'rejected'} |"
+            )
+    return lines
+
+
 def render_session_markdown(
-    entries: Sequence[ReportEntry], title: str = "cuthermo report"
+    entries: Sequence[ReportEntry],
+    title: str = "cuthermo report",
+    tuning: Optional[Sequence[Mapping]] = None,
 ) -> str:
     """Markdown digest of one iteration (the commit-message artifact)."""
     lines = [f"# {title}", ""]
@@ -497,6 +610,8 @@ def render_session_markdown(
                 f"save ~{100 * a.est_transaction_saving:.0f}% — "
                 f"{a.description}"
             )
+    if tuning:
+        lines += _tuning_section_markdown(tuning)
     lines.append("")
     return "\n".join(lines)
 
@@ -505,23 +620,25 @@ def write_report_bundle(
     entries: Sequence[ReportEntry],
     out_dir: str,
     title: str = "cuthermo report",
+    tuning: Optional[Sequence[Mapping]] = None,
 ) -> Dict[str, str]:
     """Write a whole-iteration report bundle into ``out_dir``.
 
     Produces ``index.html`` (self-contained gallery), ``report.md``
     (markdown digest) and one ``<kernel>.csv`` per entry (the exact
-    Fig. 5 CSV artifact).  Returns a name->path mapping of everything
-    written.
+    Fig. 5 CSV artifact).  ``tuning`` (trajectory dicts, see
+    ``render_session_html``) adds the tuning-trajectory section to both
+    digests.  Returns a name->path mapping of everything written.
     """
     os.makedirs(out_dir, exist_ok=True)
     written: Dict[str, str] = {}
     index = os.path.join(out_dir, "index.html")
     with open(index, "w") as f:
-        f.write(render_session_html(entries, title=title))
+        f.write(render_session_html(entries, title=title, tuning=tuning))
     written["index.html"] = index
     md = os.path.join(out_dir, "report.md")
     with open(md, "w") as f:
-        f.write(render_session_markdown(entries, title=title))
+        f.write(render_session_markdown(entries, title=title, tuning=tuning))
     written["report.md"] = md
     seen: Dict[str, int] = {}
     for e in entries:

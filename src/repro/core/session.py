@@ -59,11 +59,18 @@ from .trace import GridSampler, RegionInfo, ShardInfo
 #:     kernel's heatmap metadata ("shards": [{shard, lo, hi, programs,
 #:     records, dropped, wall_s}, ...]).  Backward compatible on read:
 #:     v1 artifacts simply load with empty shard provenance.
-ARTIFACT_VERSION = 2
+#: v3  (autotuner) adds an optional top-level "tuning" mapping to the
+#:     iteration manifest: which tuning step this iteration is, and
+#:     which advisor Action spawned which candidate (see
+#:     ``repro.core.tuner`` and docs/file-format.md).  Backward
+#:     compatible on read: v1/v2 artifacts load with no tuning
+#:     provenance.
+ARTIFACT_VERSION = 3
 
-#: Versions this build can load.  v1 lacks shard provenance but is
-#: otherwise identical; writers always stamp ARTIFACT_VERSION.
-SUPPORTED_VERSIONS = (1, 2)
+#: Versions this build can load.  v1 lacks shard provenance, v2 lacks
+#: tuning provenance; both are otherwise identical and load with the
+#: missing fields empty.  Writers always stamp ARTIFACT_VERSION.
+SUPPORTED_VERSIONS = (1, 2, 3)
 
 SESSION_FORMAT = "cuthermo-session"
 ITERATION_FORMAT = "cuthermo-iteration"
@@ -266,6 +273,10 @@ class Iteration:
     created: float
     kernels: Tuple[ProfiledKernel, ...]
     note: str = ""
+    # v3 tuning provenance: which autotuner step produced this iteration
+    # and which advisor Action spawned the candidate (None when the
+    # iteration was not written by the tuner)
+    tuning: Optional[Mapping] = None
 
     def kernel(self, name: str) -> ProfiledKernel:
         """Look up one profiled kernel by manifest name."""
@@ -362,6 +373,7 @@ def write_iteration(
     kernels: Sequence[ProfiledKernel],
     label: Optional[str] = None,
     note: str = "",
+    tuning: Optional[Mapping] = None,
 ) -> Path:
     """Persist one iteration (manifest.json + one npz per kernel).
 
@@ -373,6 +385,10 @@ def write_iteration(
     alignment keys of ``Iteration.kernel`` and cross-iteration diffs);
     duplicates raise :class:`SessionError` instead of silently shadowing
     each other.
+
+    ``tuning`` is the optional v3 autotuner provenance mapping (must be
+    JSON-serializable; see ``repro.core.tuner`` for the shape) stored
+    verbatim under the manifest's ``tuning`` key.
     """
     path = Path(path)
     names_seen = [pk.name for pk in kernels]
@@ -417,6 +433,8 @@ def write_iteration(
         "created": time.time(),
         "kernels": entries,
     }
+    if tuning is not None:
+        manifest["tuning"] = dict(tuning)
     with open(path / "manifest.json", "w") as f:
         json.dump(manifest, f, indent=2)
     return path
@@ -481,6 +499,8 @@ def load_iteration(path: Union[str, Path]) -> Iteration:
         created=float(manifest.get("created", 0.0)),
         kernels=tuple(kernels),
         note=manifest.get("note", ""),
+        # v1/v2 manifests carry no tuning key: loads as a plain iteration
+        tuning=manifest.get("tuning"),
     )
 
 
@@ -722,12 +742,15 @@ class ProfileSession:
         kernels: Sequence[ProfiledKernel],
         label: Optional[str] = None,
         note: str = "",
+        tuning: Optional[Mapping] = None,
     ) -> Iteration:
         """Persist already-profiled kernels as the next ``iterN`` directory.
 
         The directory is claimed with an *exclusive* mkdir, so two
         processes profiling into the same session race to distinct
         ``iterN`` numbers instead of silently overwriting each other.
+        ``tuning`` is stored as the iteration's autotuner provenance
+        (see :func:`write_iteration`).
         """
         existing = self.iteration_names()
         nums = [int(_ITER_RE.match(n).group(1)) for n in existing
@@ -741,12 +764,49 @@ class ProfileSession:
             except FileExistsError:
                 n += 1  # another writer claimed it; take the next slot
         path = write_iteration(
-            self.root / name, kernels, label=label or name, note=note
+            self.root / name, kernels, label=label or name, note=note,
+            tuning=tuning,
         )
         if name not in existing:
             existing.append(name)
         self._write_session_manifest(existing)
         return load_iteration(path)
+
+    # -- autotuning --------------------------------------------------------
+    def tune(
+        self,
+        kernel: str,
+        budget: Optional[int] = None,
+        target_patterns: Optional[Sequence[str]] = None,
+        seed: int = 0,
+        use_generated: bool = True,
+        workers: Optional[int] = None,
+        progress=None,
+    ):
+        """Close the tuning loop for one kernel family into this session.
+
+        Thin front end over :func:`repro.core.tuner.tune`: the baseline
+        profile and every candidate re-profile are persisted as numbered
+        iterations of this session, each manifest carrying the tuning
+        provenance (which advisor Action spawned which candidate).
+        ``budget`` defaults to :data:`repro.core.tuner.DEFAULT_BUDGET`.
+        Returns the :class:`~repro.core.tuner.TuneResult`; the stored
+        trajectory is recoverable later with
+        :func:`repro.core.tuner.trajectories_from_session`.
+        """
+        from .tuner import DEFAULT_BUDGET, tune as _tune
+
+        n_workers = self.workers if workers is None else max(1, int(workers))
+        return _tune(
+            kernel,
+            budget=DEFAULT_BUDGET if budget is None else budget,
+            workers=n_workers,
+            target_patterns=target_patterns,
+            seed=seed,
+            use_generated=use_generated,
+            session=self,
+            progress=progress,
+        )
 
     # -- access ------------------------------------------------------------
     def iterations(self) -> List[Iteration]:

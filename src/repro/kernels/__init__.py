@@ -14,6 +14,11 @@ ready-to-profile ``KernelSpec`` at representative default shapes with
 the deterministic dynamic context (seeded index arrays) the Level-2
 walkers need — so ``cuthermo profile --kernel spmv`` works with zero
 setup.
+
+The ladder is also the autotuner's candidate source: ``cuthermo tune``
+walks each family's ``role='optimized'`` variants forward
+(:meth:`RegistryEntry.ladder`) alongside the generated candidates it
+synthesizes from advisor actions (see ``repro.core.tuner``).
 """
 
 from __future__ import annotations
@@ -81,6 +86,20 @@ class RegistryEntry:
     def variant_names(self) -> Tuple[str, ...]:
         """All variant names, baseline first."""
         return tuple(v.name for v in self.variants)
+
+    def ladder(self, min_position: int = 0) -> Tuple[Tuple[int, "KernelVariant"], ...]:
+        """The family's optimization ladder: (position, variant) pairs.
+
+        Only ``role='optimized'`` variants, in published (paper) order,
+        starting at ``min_position`` — the autotuner walks this forward
+        (``repro.core.tuner.ladder_candidates``) and never revisits a
+        rung at or below the one it accepted.
+        """
+        return tuple(
+            (pos, v)
+            for pos, v in enumerate(self.variants)
+            if v.role == "optimized" and pos >= min_position
+        )
 
 
 def _spmv_context() -> Dict[str, np.ndarray]:

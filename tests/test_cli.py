@@ -34,11 +34,12 @@ def test_help_subprocess():
     proc = _run_cli("--help")
     assert proc.returncode == 0
     out = proc.stdout
-    for sub in ("profile", "report", "diff", "kernels"):
+    for sub in ("profile", "report", "diff", "kernels", "tune"):
         assert sub in out
 
 
-@pytest.mark.parametrize("sub", ["profile", "report", "diff", "kernels"])
+@pytest.mark.parametrize("sub", ["profile", "report", "diff", "kernels",
+                                 "tune"])
 def test_subcommand_help_subprocess(sub):
     proc = _run_cli(sub, "--help")
     assert proc.returncode == 0
@@ -154,6 +155,102 @@ def test_unknown_kernel_fails(tmp_path, capsys):
                    str(tmp_path / "s"), "--quiet"])
     assert rc == 2
     assert "unknown kernel" in capsys.readouterr().err
+
+
+# -- in-process: tune --------------------------------------------------------
+
+
+def test_tune_closes_the_loop(tmp_path, capsys):
+    from repro.core.session import load_iteration
+
+    sess = str(tmp_path / "sess")
+    assert cli.main(["tune", "gemm", "--budget", "2", "--out", sess,
+                     "--quiet"]) == 0
+    out = capsys.readouterr().out
+    assert "tune: gemm" in out and "accepted" in out
+    assert "1 improved" in out
+    # trajectory persisted: baseline + up to 2 candidate iterations,
+    # each with tuning provenance in its manifest
+    it0 = load_iteration(os.path.join(sess, "iter0"))
+    assert it0.tuning["role"] == "baseline"
+    it1 = load_iteration(os.path.join(sess, "iter1"))
+    assert it1.tuning["candidate"]["label"].startswith("ladder:")
+
+
+def test_tune_report_bundle_has_trajectory(tmp_path, capsys):
+    sess = str(tmp_path / "sess")
+    assert cli.main(["tune", "gramschm", "--budget", "2", "--out", sess,
+                     "--quiet", "--report"]) == 0
+    capsys.readouterr()
+    index = tmp_path / "sess" / "report" / "index.html"
+    assert index.is_file()
+    html = index.read_text()
+    assert "tuning trajectory" in html and "ladder:opt" in html
+    md = (tmp_path / "sess" / "report" / "report.md").read_text()
+    assert "tuning trajectory" in md
+
+
+def test_report_on_tuned_session_recovers_trajectory(tmp_path, capsys):
+    sess = str(tmp_path / "sess")
+    assert cli.main(["tune", "ttm", "--budget", "1", "--out", sess,
+                     "--quiet"]) == 0
+    capsys.readouterr()
+    # report pointed at the SESSION ROOT rebuilds the trajectory from
+    # the stored v3 provenance alone
+    assert cli.main(["report", sess, "--out", str(tmp_path / "r")]) == 0
+    html = (tmp_path / "r" / "index.html").read_text()
+    assert "tuning trajectory" in html
+
+
+def test_report_on_tuned_session_renders_best_not_last(tmp_path, capsys):
+    # gramschm budget 2: step 1 (ladder:opt) accepted, step 2 (pin)
+    # rejected — the LAST iteration is the rejected candidate, but the
+    # report body must show the winning variant
+    sess = str(tmp_path / "sess")
+    assert cli.main(["tune", "gramschm", "--budget", "2", "--out", sess,
+                     "--quiet"]) == 0
+    capsys.readouterr()
+    assert cli.main(["report", sess, "--out", str(tmp_path / "r")]) == 0
+    html = (tmp_path / "r" / "index.html").read_text()
+    assert "gramschmidt_kernel3_opt" in html  # the best variant's kernel
+    assert "+pin" not in html  # the rejected candidate's spec is not the body
+    assert "(tuned)" in html
+
+
+def test_tune_target_pattern_and_seed_flags(tmp_path, capsys):
+    sess = str(tmp_path / "sess")
+    assert cli.main(["tune", "gemm", "--budget", "1", "--out", sess,
+                     "--target-pattern", "false-sharing",
+                     "--seed", "7", "--quiet"]) == 0
+    out = capsys.readouterr().out
+    assert "false-sharing" in out
+
+
+def test_tune_unknown_kernel_fails(tmp_path, capsys):
+    rc = cli.main(["tune", "nope", "--out", str(tmp_path / "s"),
+                   "--quiet"])
+    assert rc == 2
+    assert "unknown kernel" in capsys.readouterr().err
+
+
+def test_tune_target_pattern_choices_match_detectors(tmp_path, capsys):
+    # the parser inlines the vocabulary (so --help stays numpy-free);
+    # it must not drift from the detectors' canonical list
+    from repro.core.patterns import ALL_PATTERNS
+
+    parser = cli._build_parser()
+    (tune_action,) = [
+        a
+        for sub in parser._subparsers._group_actions
+        for a in sub.choices["tune"]._actions
+        if a.dest == "target_pattern"
+    ]
+    assert set(tune_action.choices) == set(ALL_PATTERNS)
+    # and a typo fails loudly instead of silently tuning nothing
+    with pytest.raises(SystemExit) as exc:
+        cli.main(["tune", "gemm", "--target-pattern", "hotrandom",
+                  "--out", str(tmp_path / "s")])
+    assert exc.value.code == 2
 
 
 @pytest.mark.parametrize("spec", ["bogus", "window:abc", "window:", "window:0"])

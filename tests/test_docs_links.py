@@ -1,0 +1,61 @@
+"""Docs integrity: every relative link in README + docs/*.md resolves."""
+
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "tools"))
+
+from check_docs_links import check_file, default_files  # noqa: E402
+
+
+def test_docs_surface_is_nonempty():
+    files = default_files(REPO)
+    names = {f.name for f in files}
+    # the documented tree: README + the five core docs must exist
+    assert "README.md" in names
+    for doc in ("architecture.md", "cli.md", "file-format.md",
+                "patterns.md", "tuning.md", "tutorial.md"):
+        assert doc in names, f"docs/{doc} missing from the docs surface"
+
+
+def test_every_relative_link_resolves():
+    failures = []
+    for f in default_files(REPO):
+        for lineno, target in check_file(f):
+            failures.append(f"{f.relative_to(REPO)}:{lineno}: {target}")
+    assert not failures, "broken relative links:\n" + "\n".join(failures)
+
+
+def test_checker_flags_a_broken_link(tmp_path):
+    bad = tmp_path / "bad.md"
+    bad.write_text("see [missing](does-not-exist.md) and [ok](bad.md)\n")
+    breaks = check_file(bad)
+    assert breaks == [(1, "does-not-exist.md")]
+
+
+def test_checker_skips_external_and_fenced(tmp_path):
+    doc = tmp_path / "doc.md"
+    doc.write_text(
+        "[web](https://example.com) [anchor](#section)\n"
+        "```console\n[fake](inside-fence.md)\n```\n"
+    )
+    assert check_file(doc) == []
+
+
+def test_checker_cli_exit_codes(tmp_path):
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "check_docs_links.py")],
+        capture_output=True, text=True, timeout=60,
+    )
+    assert proc.returncode == 0, proc.stderr
+    bad = tmp_path / "bad.md"
+    bad.write_text("[x](nope.md)\n")
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "check_docs_links.py"),
+         str(bad)],
+        capture_output=True, text=True, timeout=60,
+    )
+    assert proc.returncode == 1
+    assert "nope.md" in proc.stderr

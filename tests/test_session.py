@@ -210,21 +210,50 @@ def test_workers2_session_end_to_end_with_shard_provenance(tmp_path):
 
 
 def test_v1_artifact_still_loads(tmp_path):
-    """The v2 loader reads v-previous artifacts (no shard provenance)."""
+    """The v3 loader reads v1 artifacts (no shard or tuning provenance)."""
     from repro.core.session import SUPPORTED_VERSIONS
 
-    assert 1 in SUPPORTED_VERSIONS and ARTIFACT_VERSION == 2
+    assert 1 in SUPPORTED_VERSIONS and ARTIFACT_VERSION == 3
     path = write_iteration(tmp_path / "iter0", [_profiled()])
     mpath = path / "manifest.json"
     manifest = json.loads(mpath.read_text())
-    # rewrite as a faithful v1 artifact: old stamp, no shards key
+    # rewrite as a faithful v1 artifact: old stamp, no shards/tuning keys
     manifest["version"] = 1
+    manifest.pop("tuning", None)
     for entry in manifest["kernels"]:
         entry["heatmap"].pop("shards", None)
     mpath.write_text(json.dumps(manifest))
     it = load_iteration(path)
     assert it.kernels[0].shards == ()
+    assert it.tuning is None
     assert heatmaps_equal(it.kernels[0].heatmap, _profiled().heatmap)
+
+
+def test_v2_artifact_still_loads(tmp_path):
+    """The v3 loader reads v2 artifacts (shards, but no tuning key)."""
+    path = write_iteration(tmp_path / "iter0", [_profiled()])
+    mpath = path / "manifest.json"
+    manifest = json.loads(mpath.read_text())
+    manifest["version"] = 2
+    manifest.pop("tuning", None)
+    mpath.write_text(json.dumps(manifest))
+    it = load_iteration(path)
+    assert it.tuning is None
+    assert heatmaps_equal(it.kernels[0].heatmap, _profiled().heatmap)
+
+
+def test_tuning_provenance_round_trips(tmp_path):
+    """A v3 'tuning' mapping survives the write/load round trip verbatim."""
+    meta = {
+        "family": "gemm",
+        "step": 1,
+        "role": "candidate",
+        "candidate": {"label": "ladder:v01", "source": "ladder"},
+        "accepted": True,
+    }
+    path = write_iteration(tmp_path / "iter0", [_profiled()], tuning=meta)
+    it = load_iteration(path)
+    assert it.tuning == meta
 
 
 def test_v1_session_json_still_opens(tmp_path):

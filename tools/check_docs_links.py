@@ -1,0 +1,93 @@
+"""Docs link checker: every relative markdown link must resolve.
+
+Scans the repo's markdown surface (README.md + docs/*.md by default) for
+inline links and images, and verifies that every *relative* target —
+including the docs' cross-references to each other and links into the
+source tree — exists on disk.  External (http/https/mailto) targets and
+pure in-page anchors are skipped; a `path#anchor` target is checked for
+the path part only.
+
+Exit code 1 lists every broken link as ``file:line: target``; CI runs
+this as the ``docs-links`` job, and ``tests/test_docs_links.py`` runs it
+in the tier-1 suite.
+
+Usage:
+    python tools/check_docs_links.py            # repo default set
+    python tools/check_docs_links.py FILE...    # explicit files
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+from typing import List, Tuple
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+#: Inline markdown links/images: [text](target) / ![alt](target).
+#: Targets with spaces or nested parens are not used in this repo.
+_LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+
+#: Schemes that are not filesystem targets.
+_EXTERNAL = ("http://", "https://", "mailto:", "ftp://")
+
+
+def default_files(root: Path = REPO_ROOT) -> List[Path]:
+    """The repo's linked markdown surface: README.md + the docs tree."""
+    files = [root / "README.md"]
+    files += sorted((root / "docs").glob("*.md"))
+    return [f for f in files if f.is_file()]
+
+
+def check_file(path: Path) -> List[Tuple[int, str]]:
+    """All broken relative links of one markdown file as (line, target)."""
+    broken: List[Tuple[int, str]] = []
+    inside_fence = False
+    for lineno, line in enumerate(
+        path.read_text(encoding="utf-8").splitlines(), start=1
+    ):
+        # fenced code blocks hold transcripts, not navigable links
+        if line.lstrip().startswith("```"):
+            inside_fence = not inside_fence
+            continue
+        if inside_fence:
+            continue
+        for target in _LINK_RE.findall(line):
+            if target.startswith(_EXTERNAL):
+                continue
+            file_part = target.split("#", 1)[0]
+            if not file_part:  # pure in-page anchor
+                continue
+            resolved = (path.parent / file_part).resolve()
+            if not resolved.exists():
+                broken.append((lineno, target))
+    return broken
+
+
+def _display(path: Path) -> str:
+    """Repo-relative path when possible, absolute otherwise."""
+    try:
+        return str(path.resolve().relative_to(REPO_ROOT))
+    except ValueError:
+        return str(path)
+
+
+def main(argv: List[str]) -> int:
+    """Check every file (or the default set); print and count breaks."""
+    files = [Path(a) for a in argv] if argv else default_files()
+    failures: List[str] = []
+    for f in files:
+        for lineno, target in check_file(f):
+            failures.append(f"{_display(f)}:{lineno}: {target}")
+    if failures:
+        print("broken relative links:", file=sys.stderr)
+        for item in failures:
+            print(f"  {item}", file=sys.stderr)
+        return 1
+    print(f"docs-links: {len(files)} files checked, all relative links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
