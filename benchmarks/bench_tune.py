@@ -14,6 +14,19 @@ The acceptance bar mirrors the repo's tuning-loop contract: at least
 **3 families** must end on a variant with strictly fewer sector
 transactions AND at least one fixed pattern — fully unattended.
 
+Every family tunes into a (throwaway) ``ProfileSession``, so each
+recorded step carries the ``iteration`` name that stored it — the
+trajectory in BENCH_tune.json links back to session provenance exactly
+like ``tuner.trajectories_from_session`` recovers it.
+
+Cache section: all families share one content-addressed
+``CollectionCache`` (and, under ``benchmarks/run.py``, the warm
+``ShardedCollector`` pool from the collect bench).  After the cold
+pass, one family is re-tuned warm: the rerun must perform strictly
+fewer fresh traces than candidates tried (repeated candidates are
+served bit-identical cached heat maps), and the hit/miss counters are
+recorded in the metrics block.
+
 Machine-readable output: every ``__main__`` run (and
 ``benchmarks/run.py``) writes ``BENCH_tune.json`` — per-family speedup,
 candidates tried, wall time, full step trajectories, git sha.
@@ -26,6 +39,7 @@ Usage:
 
 from __future__ import annotations
 
+import tempfile
 from typing import List, Optional, Tuple
 
 #: Ladder families the unattended loop is expected to close.  (cuszp,
@@ -49,32 +63,100 @@ def run(
     budget: int = 6,
     seed: int = 0,
     min_closed: int = MIN_CLOSED,
+    collector=None,
 ) -> Tuple[List[Tuple[str, float, str]], List[dict]]:
-    """Tune every family; returns (printed rows, trajectory dicts)."""
+    """Tune every family; returns (printed rows, trajectory dicts).
+
+    Runs inside a throwaway ``ProfileSession`` so every recorded step
+    carries its ``iteration`` provenance, with one shared
+    ``CollectionCache`` across all families.  ``collector`` reuses an
+    already-warm shard pool (``benchmarks/run.py`` passes the one the
+    collect bench warmed).  After the cold pass the first family is
+    re-tuned warm to record the cache-bounded loop: fresh traces
+    strictly fewer than candidates tried, hits bit-identical.
+    """
+    from repro.core.cache import CollectionCache
+    from repro.core.session import ProfileSession, heatmaps_equal
     from repro.core.tuner import tune
 
+    cache = CollectionCache()
     rows: List[Tuple[str, float, str]] = []
     results: List[dict] = []
-    print("family,speedup,candidates,fixed,converged,wall_s")
-    for fam in families:
-        res = tune(fam, budget=budget, seed=seed)
-        d = res.as_dict()
-        results.append(d)
-        fixed = ";".join(f"{p}@{r}" for r, p in res.fixed_patterns) or "-"
-        print(
-            f"{fam},{res.speedup:.2f}x,{len(res.steps)},{fixed},"
-            f"{res.converged},{res.wall_s:.2f}"
-        )
-        rows.append(
-            (
-                f"tune_{fam}_speedup",
-                res.speedup,
-                f"{res.baseline.transactions}->{res.best.transactions} "
-                f"transfers via {res.best_label} "
-                f"({len(res.steps)} candidates, "
-                f"{len(res.fixed_patterns)} patterns fixed)",
+    cold: List = []
+    with tempfile.TemporaryDirectory(prefix="bench-tune-") as tmp:
+        sess = ProfileSession(tmp, cache=cache)
+        print("family,speedup,candidates,fixed,converged,wall_s")
+        for fam in families:
+            res = tune(
+                fam, budget=budget, seed=seed, session=sess,
+                collector=collector, cache=cache,
             )
+            cold.append(res)
+            d = res.as_dict()
+            results.append(d)
+            fixed = ";".join(f"{p}@{r}" for r, p in res.fixed_patterns) or "-"
+            print(
+                f"{fam},{res.speedup:.2f}x,{len(res.steps)},{fixed},"
+                f"{res.converged},{res.wall_s:.2f}"
+            )
+            rows.append(
+                (
+                    f"tune_{fam}_speedup",
+                    res.speedup,
+                    f"{res.baseline.transactions}->{res.best.transactions} "
+                    f"transfers via {res.best_label} "
+                    f"({len(res.steps)} candidates, "
+                    f"{len(res.fixed_patterns)} patterns fixed)",
+                )
+            )
+
+        # warm rerun: same family, same seed, same shared cache — every
+        # repeated candidate must be served from the cache, so the rerun
+        # performs strictly fewer fresh traces than candidates it tries
+        fam = families[0]
+        miss_before = cache.stats.misses
+        hit_before = cache.stats.hits
+        warm = tune(
+            fam, budget=budget, seed=seed, session=sess,
+            collector=collector, cache=cache,
         )
+        fresh = cache.stats.misses - miss_before
+        hits = cache.stats.hits - hit_before
+        tried = len(warm.steps) + 1  # candidates + the baseline profile
+        assert fresh < tried, (
+            f"warm rerun of {fam} re-traced {fresh}/{tried} profiles — "
+            "the collection cache is not bounding the tune loop"
+        )
+        assert heatmaps_equal(warm.best.heatmap, cold[0].best.heatmap), (
+            "cached tune rerun diverged from the cold trajectory"
+        )
+        print(
+            f"warm rerun ({fam}): {tried} profiles, {fresh} fresh traces, "
+            f"{hits} cache hits (bit-identical: yes)"
+        )
+    rows.append(
+        (
+            "tune_rerun_candidates_tried",
+            float(tried),
+            f"warm {fam} rerun: candidate profiles + baseline",
+        )
+    )
+    rows.append(
+        (
+            "tune_rerun_fresh_traces",
+            float(fresh),
+            f"grid walks the warm rerun still performed "
+            f"(target < {tried}; cache hits are bit-identical)",
+        )
+    )
+    rows.append(
+        (
+            "tune_cache_hits",
+            float(cache.stats.hits),
+            f"{cache.stats.misses} misses across "
+            f"{len(families)} cold families + 1 warm rerun",
+        )
+    )
     closed = sum(
         1 for d in results if d["improved"] and d["fixed"]
     )
@@ -125,12 +207,18 @@ def run_all(
     budget: int = 6,
     seed: int = 0,
     json_path: Optional[str] = "BENCH_tune.json",
+    collector=None,
 ) -> List[Tuple[str, float, str]]:
-    """Whole tuning bench + the machine-readable record."""
+    """Whole tuning bench + the machine-readable record.
+
+    ``collector`` reuses an already-warm ``ShardedCollector`` pool
+    (``benchmarks/run.py`` shares the collect bench's).
+    """
     families = SMOKE_FAMILIES if smoke else FAMILIES
     rows, results = run(
         families=families, budget=budget, seed=seed,
         min_closed=MIN_CLOSED_SMOKE if smoke else MIN_CLOSED,
+        collector=collector,
     )
     if json_path:
         write_bench_json(

@@ -23,24 +23,40 @@ def main() -> None:
         bench_speedup,
         bench_tune,
     )
+    from repro.core.collector import ShardedCollector
 
+    # ONE warm shard pool for the whole suite: the collect bench pays
+    # the spawn+import cost once (and records it), the tune bench then
+    # profiles its candidates on the same warm workers
+    collector = ShardedCollector(bench_overhead.effective_workers(4))
     rows = []
-    for name, runner in (
-        ("patterns (paper Table I)", bench_patterns.run),
-        # run_all = Table II + collection throughput + sharded-vs-serial;
-        # it also writes the BENCH_collect.json record
-        ("overhead (paper Table II)", bench_overhead.run_all),
-        ("speedup (paper Table III)", bench_speedup.run),
-        # closes the tuning loop per family; writes BENCH_tune.json
-        ("autotuner (closed loop)", bench_tune.run_all),
-        ("roofline (§Roofline)", bench_roofline.run),
-    ):
-        print(f"\n===== {name} =====")
-        try:
-            rows.extend(runner())
-        except Exception as e:  # noqa: BLE001 — keep the suite going
-            print(f"# FAILED: {e!r}")
-            rows.append((name, 0.0, f"FAILED {e!r}"))
+    try:
+        for name, runner in (
+            ("patterns (paper Table I)", bench_patterns.run),
+            # run_all = Table II + collection throughput +
+            # sharded-vs-serial + collection cache; it also writes the
+            # BENCH_collect.json record
+            (
+                "overhead (paper Table II)",
+                lambda: bench_overhead.run_all(collector=collector),
+            ),
+            ("speedup (paper Table III)", bench_speedup.run),
+            # closes the tuning loop per family on the same warm pool;
+            # writes BENCH_tune.json
+            (
+                "autotuner (closed loop)",
+                lambda: bench_tune.run_all(collector=collector),
+            ),
+            ("roofline (§Roofline)", bench_roofline.run),
+        ):
+            print(f"\n===== {name} =====")
+            try:
+                rows.extend(runner())
+            except Exception as e:  # noqa: BLE001 — keep the suite going
+                print(f"# FAILED: {e!r}")
+                rows.append((name, 0.0, f"FAILED {e!r}"))
+    finally:
+        collector.close()
 
     print("\n===== summary: name,us_per_call,derived =====")
     for name, us, derived in rows:

@@ -13,6 +13,11 @@ Subcommands (see ``docs/cli.md`` for transcripts):
 * ``cuthermo tune gemm --out sess/`` — close the loop unattended: map
   advisor actions to candidate variants, re-profile, keep improvements,
   repeat until the patterns are fixed or the budget runs out.
+* ``cuthermo tune --all --budget 16`` — the concurrent scheduler: tune
+  every family (or a listed subset) together on one shared worker pool
+  under one global budget, deterministic per ``--seed``.  ``--cache
+  DIR`` (profile and tune) serves unchanged specs bit-identical heat
+  maps from a content-addressed on-disk cache instead of re-tracing.
 
 Heavy imports (numpy, jax-backed kernel modules) happen inside the
 subcommand handlers, so ``cuthermo --help`` stays instant.
@@ -81,6 +86,14 @@ def _build_parser() -> argparse.ArgumentParser:
         "serial); results are bit-identical for traces within the "
         "record cap, artifacts gain per-shard provenance",
     )
+    pr.add_argument(
+        "--cache",
+        default=None,
+        metavar="DIR",
+        help="content-addressed collection cache directory: unchanged "
+        "kernels return bit-identical stored heat maps instead of "
+        "re-tracing (created on first use)",
+    )
     pr.add_argument("--label", default=None, help="iteration label")
     pr.add_argument("--note", default="", help="free-form iteration note")
     pr.add_argument(
@@ -133,10 +146,18 @@ def _build_parser() -> argparse.ArgumentParser:
     )
     tn.add_argument(
         "kernel",
-        nargs="+",
+        nargs="*",
         metavar="NAME[:VARIANT]",
         help="kernel families to tune (the given variant is the starting "
         "rung; default: the family's baseline)",
+    )
+    tn.add_argument(
+        "--all",
+        action="store_true",
+        help="concurrent scheduler: tune the listed families (or the "
+        "whole registry when none are listed) together on one shared "
+        "worker pool under ONE global --budget; deterministic per "
+        "--seed via ordered result commitment",
     )
     tn.add_argument(
         "--budget",
@@ -144,7 +165,8 @@ def _build_parser() -> argparse.ArgumentParser:
         type=int,
         default=None,  # resolved to tuner.DEFAULT_BUDGET in the handler
         metavar="N",
-        help="max candidate re-profiles per family (default: 8)",
+        help="max candidate re-profiles per family, or the global total "
+        "across families with --all (default: 8)",
     )
     tn.add_argument(
         "--workers",
@@ -177,6 +199,14 @@ def _build_parser() -> argparse.ArgumentParser:
         metavar="DIR",
         help="session directory the trajectory is persisted into "
         "(default: ./cuthermo-session)",
+    )
+    tn.add_argument(
+        "--cache",
+        default=None,
+        metavar="DIR",
+        help="content-addressed collection cache directory: repeated "
+        "candidates return bit-identical stored heat maps instead of "
+        "re-tracing (created on first use)",
     )
     tn.add_argument(
         "--seed",
@@ -286,19 +316,16 @@ def _cmd_profile(args: argparse.Namespace) -> int:
     for entry, _ in resolved:
         entry_counts[entry.name] = entry_counts.get(entry.name, 0) + 1
     try:
-        sess = ProfileSession(args.out)
+        sess = ProfileSession(args.out, cache=args.cache)
     except SessionError as e:
         print(f"cuthermo: {e}", file=sys.stderr)
         return 2
     workers = max(1, args.workers)
-    collector = None
-    if workers > 1:
-        from repro.core.collector import ShardedCollector
-
-        # one pool shared by every kernel of this invocation
-        collector = ShardedCollector(workers)
     profiled = []
     try:
+        # one warm pool shared by every kernel of this invocation,
+        # owned (and closed) by the session
+        collector = sess.collector(workers)
         for entry, variant in resolved:
             name = (
                 entry.name
@@ -316,10 +343,13 @@ def _cmd_profile(args: argparse.Namespace) -> int:
                 variant=variant.name,
                 region_map=entry.region_map,
                 collector=collector,
+                cache=sess.cache,
             )
             profiled.append(pk)
             if not args.quiet:
                 print(f"# {entry.name}:{variant.name}")
+                if pk.cached:
+                    print("(served from the collection cache)")
                 if pk.shards:
                     print(
                         f"(collected in {len(pk.shards)} shards: "
@@ -331,14 +361,21 @@ def _cmd_profile(args: argparse.Namespace) -> int:
                     )
                 print(format_report(pk.heatmap))
                 print()
+        try:
+            it = sess.add_iteration(
+                profiled, label=args.label, note=args.note
+            )
+        except SessionError as e:
+            print(f"cuthermo: {e}", file=sys.stderr)
+            return 2
     finally:
-        if collector is not None:
-            collector.close()
-    try:
-        it = sess.add_iteration(profiled, label=args.label, note=args.note)
-    except SessionError as e:
-        print(f"cuthermo: {e}", file=sys.stderr)
-        return 2
+        sess.close()
+    if sess.cache is not None:
+        st = sess.cache.stats
+        print(
+            f"cache: {st.hits} hits ({st.memory_hits} memory, "
+            f"{st.disk_hits} disk), {st.misses} misses"
+        )
     print(f"wrote {it.path} ({len(profiled)} kernels)")
     return 0
 
@@ -414,33 +451,72 @@ def _cmd_tune(args: argparse.Namespace) -> int:
     from repro.core.session import ProfileSession, SessionError
     from repro.core.tuner import DEFAULT_BUDGET, TuneError
 
+    if not args.kernel and not args.all:
+        print(
+            "cuthermo tune: nothing to do "
+            "(pass NAME[:VARIANT] families or --all)",
+            file=sys.stderr,
+        )
+        return 2
     try:
-        sess = ProfileSession(args.out)
+        sess = ProfileSession(args.out, cache=args.cache)
     except SessionError as e:
         print(f"cuthermo: {e}", file=sys.stderr)
         return 2
     progress = None if args.quiet else (lambda msg: print(f"  {msg}"))
     budget = DEFAULT_BUDGET if args.budget is None else max(0, args.budget)
+    workers = max(1, args.workers)
     results = []
-    for ref in args.kernel:
-        if not args.quiet:
-            print(f"# tuning {ref}")
-        try:
-            res = sess.tune(
-                ref,
-                budget=budget,
-                target_patterns=args.target_pattern or None,
-                seed=args.seed,
-                use_generated=not args.no_generated,
-                workers=max(1, args.workers),
-                progress=progress,
-            )
-        except (TuneError, SessionError) as e:
-            print(f"cuthermo: {e}", file=sys.stderr)
-            return 2
-        results.append(res)
-        print(res.summary())
-        print()
+    try:
+        if args.all:
+            from repro.core.tuner import tune_all
+
+            try:
+                res_all = tune_all(
+                    args.kernel or None,
+                    budget=budget,
+                    target_patterns=args.target_pattern or None,
+                    seed=args.seed,
+                    use_generated=not args.no_generated,
+                    session=sess,
+                    collector=sess.collector(workers),
+                    cache=sess.cache,
+                    progress=progress,
+                )
+            except (TuneError, SessionError) as e:
+                print(f"cuthermo: {e}", file=sys.stderr)
+                return 2
+            results = list(res_all.results)
+            print(res_all.summary())
+            print()
+        else:
+            for ref in args.kernel:
+                if not args.quiet:
+                    print(f"# tuning {ref}")
+                try:
+                    res = sess.tune(
+                        ref,
+                        budget=budget,
+                        target_patterns=args.target_pattern or None,
+                        seed=args.seed,
+                        use_generated=not args.no_generated,
+                        workers=workers,
+                        progress=progress,
+                    )
+                except (TuneError, SessionError) as e:
+                    print(f"cuthermo: {e}", file=sys.stderr)
+                    return 2
+                results.append(res)
+                print(res.summary())
+                print()
+    finally:
+        sess.close()
+    if sess.cache is not None:
+        st = sess.cache.stats
+        print(
+            f"cache: {st.hits} hits ({st.memory_hits} memory, "
+            f"{st.disk_hits} disk), {st.misses} misses"
+        )
     if args.report:
         from repro.core.render import ReportEntry, write_report_bundle
 

@@ -18,12 +18,14 @@ import numpy as np
 
 from . import hlo_thermo
 from .advisor import Action, advise, format_report
+from .cache import CollectionCache, spec_content_hash
 from .collector import KernelSpec, analyze, collect
 from .heatmap import Heatmap
 from .patterns import PatternReport, detect_all, patterns_by_region
 from .render import render_ascii, render_csv, render_html, save
 from .session import Iteration, ProfileSession, SessionDiff, SessionError
 from .trace import GridSampler, KernelWhitelist
+from .tuner import TuneAllResult, TuneResult, tune, tune_all
 
 
 def heatmap(
@@ -70,6 +72,7 @@ def report(
 
 __all__ = [
     "Action",
+    "CollectionCache",
     "GridSampler",
     "Heatmap",
     "Iteration",
@@ -79,6 +82,8 @@ __all__ = [
     "ProfileSession",
     "SessionDiff",
     "SessionError",
+    "TuneAllResult",
+    "TuneResult",
     "actions",
     "advise",
     "analyze",
@@ -94,4 +99,7 @@ __all__ = [
     "render_html",
     "report",
     "save",
+    "spec_content_hash",
+    "tune",
+    "tune_all",
 ]

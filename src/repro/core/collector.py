@@ -48,6 +48,7 @@ serial (and ``ShardedCollector.analyze`` warns).
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
@@ -63,6 +64,8 @@ from .trace import (
     TraceBuffer,
     linearize_array,
     sampled_grid_array,
+    sampled_grid_size,
+    sampled_grid_slice,
     unique_pairs,
 )
 
@@ -403,10 +406,12 @@ def collect_shard(
     Pure function of its arguments — the unit both the in-process
     fallback and the pool workers execute.  The shard holding the
     globally first sampled program (``lo == 0``) owns ``once=True``
-    operands.
+    operands.  The shard's coordinate rows are computed directly
+    (``sampled_grid_slice``), so per-shard cost is O(hi - lo), not
+    O(total grid).
     """
     t0 = time.perf_counter()
-    pids = sampled_grid_array(kernel.grid, sampler)[lo:hi]
+    pids = sampled_grid_slice(kernel.grid, sampler, lo, hi)
     buf, _ = collect(
         kernel,
         sampler,
@@ -497,22 +502,57 @@ def _spec_fingerprint(spec: KernelSpec) -> Tuple:
     )
 
 
+#: Worker-process memo of rebuilt (spec, seeded context) pairs, keyed by
+#: the pickled (source, fingerprint) pair.  A warm worker collecting the
+#: same kernel across tune steps / bench reps pays the registry rebuild
+#: (and, for seeded families, the RNG context generation) exactly once.
+#: Entries are only stored AFTER the fingerprint guard passes, so a
+#: stale-source rejection can never be cached away.
+_REBUILD_MEMO: Dict[bytes, Tuple[KernelSpec, Optional[Dict[str, np.ndarray]]]] = {}
+
+_REBUILD_MEMO_MAX = 16
+
+
+def _rebuild_spec_cached(
+    source, fingerprint: Tuple
+) -> Tuple[KernelSpec, Optional[Dict[str, np.ndarray]]]:
+    """Fingerprint-guarded :func:`_rebuild_spec` with a per-process memo."""
+    import pickle
+
+    try:
+        key = pickle.dumps((source, fingerprint))
+    except Exception:  # noqa: BLE001 — unpicklable key: just don't memoize
+        key = None
+    if key is not None:
+        hit = _REBUILD_MEMO.get(key)
+        if hit is not None:
+            return hit
+    spec, ctx = _rebuild_spec(source)
+    if _spec_fingerprint(spec) != fingerprint:
+        raise ValueError(
+            f"shard worker rebuilt {source!r} into a spec that "
+            "does not structurally match the parent's (grid, operand, "
+            "or scratch layout differs); the parent spec was modified "
+            "after source stamping — collect it serially instead"
+        )
+    if key is not None:
+        if len(_REBUILD_MEMO) >= _REBUILD_MEMO_MAX:
+            _REBUILD_MEMO.pop(next(iter(_REBUILD_MEMO)))
+        _REBUILD_MEMO[key] = (spec, ctx)
+    return spec, ctx
+
+
 def _collect_shard_task(task: dict) -> Tuple[TraceBuffer, ShardInfo]:
     """Pool entry point: rebuild the spec from its source ref, collect.
 
     Spawn-safe by construction — nothing unpicklable crosses the
     process boundary.  The spec (and, for registry refs, its seeded
-    dynamic context) is rebuilt from ``task['source']``; an explicit
-    dynamic context (plain numpy arrays) overrides the seeded one.
+    dynamic context) is rebuilt from ``task['source']`` — memoized per
+    worker process, so repeated collects of one kernel (a tuning loop,
+    a benchmark's reps) rebuild once; an explicit dynamic context
+    (plain numpy arrays) overrides the seeded one.
     """
-    spec, ctx = _rebuild_spec(task["source"])
-    if _spec_fingerprint(spec) != task["fingerprint"]:
-        raise ValueError(
-            f"shard worker rebuilt {task['source']!r} into a spec that "
-            "does not structurally match the parent's (grid, operand, "
-            "or scratch layout differs); the parent spec was modified "
-            "after source stamping — collect it serially instead"
-        )
+    spec, ctx = _rebuild_spec_cached(task["source"], task["fingerprint"])
     if task["dynamic_context"] is not None:
         ctx = task["dynamic_context"]
     return collect_shard(
@@ -575,30 +615,39 @@ class ShardedCollector:
         self.max_records = max_records
         self.start_method = start_method
         self._pool = None
+        # pool creation must be race-free: the concurrent tune
+        # scheduler shares one collector across profiling threads
+        self._pool_lock = threading.Lock()
 
     # -- pool lifecycle -----------------------------------------------------
     def _ensure_pool(self):
-        if self._pool is None:
-            import concurrent.futures
-            import multiprocessing
+        with self._pool_lock:
+            if self._pool is None:
+                import concurrent.futures
+                import multiprocessing
 
-            self._pool = concurrent.futures.ProcessPoolExecutor(
-                max_workers=self.workers,
-                mp_context=multiprocessing.get_context(self.start_method),
-            )
-        return self._pool
+                self._pool = concurrent.futures.ProcessPoolExecutor(
+                    max_workers=self.workers,
+                    mp_context=multiprocessing.get_context(self.start_method),
+                )
+            return self._pool
 
-    def warmup(self) -> None:
+    def warmup(self) -> float:
         """Pre-import the kernel registry in every worker (pays the
-        spawn + import cost up front, outside any timed section)."""
+        spawn + import cost up front, outside any timed section).
+        Returns the warm-up wall time in seconds (benchmarks record
+        it); near-zero when the pool is already warm."""
+        t0 = time.perf_counter()
         pool = self._ensure_pool()
         list(pool.map(_warm_worker, range(self.workers)))
+        return time.perf_counter() - t0
 
     def close(self) -> None:
         """Shut the pool down (idempotent)."""
-        if self._pool is not None:
-            self._pool.shutdown()
-            self._pool = None
+        with self._pool_lock:
+            if self._pool is not None:
+                self._pool.shutdown()
+                self._pool = None
 
     def __enter__(self) -> "ShardedCollector":
         return self
@@ -620,7 +669,7 @@ class ShardedCollector:
         exact single-pass heat map.
         """
         sampler = sampler or GridSampler()
-        total = int(sampled_grid_array(kernel.grid, sampler).shape[0])
+        total = sampled_grid_size(kernel.grid, sampler)
         bounds = shard_bounds(total, self.workers)
         # the GLOBAL record cap is divided across shards, so a sharded
         # collect never admits more records than the serial one would

@@ -42,6 +42,7 @@ from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple, Uni
 import numpy as np
 
 from .advisor import Action, advise
+from .cache import CacheKeyError, CollectionCache, spec_content_hash
 from .collector import KernelSpec, ShardedCollector, analyze
 from .diff import HeatmapDiff, diff as diff_heatmaps
 from .heatmap import Heatmap, RegionHeatmap
@@ -198,6 +199,7 @@ def profile_kernel(
     region_map: Sequence[Tuple[str, str]] = (),
     workers: int = 1,
     collector: Optional[ShardedCollector] = None,
+    cache: Optional[CollectionCache] = None,
 ) -> "ProfiledKernel":
     """Profile one spec into a ProfiledKernel (the single assembly point).
 
@@ -212,16 +214,42 @@ def profile_kernel(
     through the sharded path; the heat map is bit-identical either way,
     and the sharded one carries per-shard provenance that the session
     artifact persists.
+
+    ``cache`` (a :class:`~repro.core.cache.CollectionCache`) makes the
+    collection content-addressed: the spec+sampler+context are hashed
+    (:func:`~repro.core.cache.spec_content_hash`), a hit skips the grid
+    walk and returns the cached heat map (bit-identical to fresh
+    collection; no shard provenance — the cache stores the canonical
+    path-independent form), a miss collects and stores.  Specs whose
+    callables cannot be content-hashed profile uncached.
     """
     sampler = sampler or GridSampler(None)
     t0 = time.perf_counter()
-    if collector is not None:
-        hm = collector.analyze(spec, sampler, dynamic_context)
-    elif workers > 1:
-        with ShardedCollector(workers) as sc:
-            hm = sc.analyze(spec, sampler, dynamic_context)
-    else:
-        hm = analyze(spec, sampler=sampler, dynamic_context=dynamic_context)
+    key = ""
+    hm = None
+    cached = False
+    if cache is not None:
+        try:
+            key = spec_content_hash(spec, sampler, dynamic_context)
+        except CacheKeyError:
+            cache.note_uncacheable()
+        else:
+            hm = cache.get(key)
+            cached = hm is not None
+    if hm is None:
+        if collector is not None:
+            hm = collector.analyze(spec, sampler, dynamic_context)
+        elif workers > 1:
+            with ShardedCollector(workers) as sc:
+                hm = sc.analyze(spec, sampler, dynamic_context)
+        else:
+            hm = analyze(
+                spec, sampler=sampler, dynamic_context=dynamic_context
+            )
+        # a truncated trace is not a pure function of the spec (record
+        # admission depends on the collection path) — never cache it
+        if cache is not None and key and hm.dropped == 0:
+            cache.put(key, hm)
     wall = time.perf_counter() - t0
     return ProfiledKernel(
         name=name or spec.name,
@@ -231,6 +259,8 @@ def profile_kernel(
         actions=tuple(advise(hm)),
         wall_s=wall,
         region_map=tuple(region_map),
+        cached=cached,
+        cache_key=key,
     )
 
 
@@ -247,6 +277,12 @@ class ProfiledKernel:
     # known region renames an optimization of this kernel performs
     # (e.g. q -> qT); persisted so later diffs align automatically
     region_map: Tuple[Tuple[str, str], ...] = ()
+    # collection-cache provenance: True when the heat map came from a
+    # CollectionCache hit (no grid walk, no shard provenance); the key
+    # is the spec's content hash ("" when profiled without a cache or
+    # the spec was uncacheable)
+    cached: bool = False
+    cache_key: str = ""
 
     @property
     def shards(self) -> Tuple[ShardInfo, ...]:
@@ -600,16 +636,29 @@ class ProfileSession:
         root: Union[str, Path],
         create: bool = True,
         workers: int = 1,
+        cache: Union[None, str, Path, CollectionCache] = None,
     ):
         """Open (and by default create) the session at ``root``.
 
         ``workers > 1`` collects every subsequent :meth:`profile` call
-        through a sharded process pool (one pool per profile call,
-        shared by that call's kernels).  Results are bit-identical to
-        serial profiling; the artifacts additionally record per-shard
-        provenance.
+        through ONE sharded process pool that persists across the
+        session's profile/tune calls (spawn + import paid once; close
+        it with :meth:`close` or use the session as a context manager).
+        Results are bit-identical to serial profiling; the artifacts
+        additionally record per-shard provenance.
+
+        ``cache`` backs every profile with a content-addressed
+        :class:`~repro.core.cache.CollectionCache`: pass an existing
+        cache, or a directory path to create an on-disk one.  Unchanged
+        kernels and repeated tuner candidates then return bit-identical
+        cached heat maps instead of re-tracing.
         """
         self.workers = max(1, int(workers))
+        if cache is None or isinstance(cache, CollectionCache):
+            self.cache = cache
+        else:
+            self.cache = CollectionCache(cache)
+        self._collector: Optional[ShardedCollector] = None
         self.root = Path(root)
         spath = self.root / "session.json"
         if spath.is_file():
@@ -631,6 +680,39 @@ class ProfileSession:
             self._write_session_manifest([])
         else:
             raise SessionError(f"{self.root}: no session.json (create=False)")
+
+    # -- collector lifecycle -----------------------------------------------
+    def collector(
+        self, workers: Optional[int] = None
+    ) -> Optional[ShardedCollector]:
+        """The session's persistent shard pool (None when serial).
+
+        Lazily created on first use and reused by every subsequent
+        profile/tune call — re-profiling a candidate no longer pays a
+        pool spin-up.  Asking for a different worker count replaces the
+        pool.  Callers must not close the returned collector; the
+        session owns it (:meth:`close`).
+        """
+        n = self.workers if workers is None else max(1, int(workers))
+        if n <= 1:
+            return None
+        if self._collector is None or self._collector.workers != n:
+            if self._collector is not None:
+                self._collector.close()
+            self._collector = ShardedCollector(n)
+        return self._collector
+
+    def close(self) -> None:
+        """Shut down the session's persistent shard pool (idempotent)."""
+        if self._collector is not None:
+            self._collector.close()
+            self._collector = None
+
+    def __enter__(self) -> "ProfileSession":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     # -- manifest ----------------------------------------------------------
     def _write_session_manifest(self, iterations: List[str]) -> None:
@@ -703,38 +785,29 @@ class ProfileSession:
         coverage for speed on very large grids.
 
         ``workers`` overrides the session's worker count for this call;
-        with more than one worker, collection is sharded across ONE
-        process pool shared by all of the call's kernels (bit-identical
-        results, per-shard provenance in the artifact).
+        with more than one worker, collection is sharded across the
+        session's persistent process pool (bit-identical results,
+        per-shard provenance in the artifact).
         """
         sampler = sampler or GridSampler(None)
         dynamic_contexts = dynamic_contexts or {}
         names = names or {}
         variants = variants or {}
         region_maps = region_maps or {}
-        n_workers = self.workers if workers is None else max(1, int(workers))
-
-        def _profile_all(collector: Optional[ShardedCollector]):
-            return [
-                profile_kernel(
-                    spec,
-                    sampler,
-                    dynamic_contexts.get(spec.name),
-                    name=names.get(spec.name),
-                    variant=variants.get(spec.name),
-                    region_map=sorted(
-                        region_maps.get(spec.name, {}).items()
-                    ),
-                    collector=collector,
-                )
-                for spec in specs
-            ]
-
-        if n_workers > 1:
-            with ShardedCollector(n_workers) as sc:
-                profiled = _profile_all(sc)
-        else:
-            profiled = _profile_all(None)
+        collector = self.collector(workers)
+        profiled = [
+            profile_kernel(
+                spec,
+                sampler,
+                dynamic_contexts.get(spec.name),
+                name=names.get(spec.name),
+                variant=variants.get(spec.name),
+                region_map=sorted(region_maps.get(spec.name, {}).items()),
+                collector=collector,
+                cache=self.cache,
+            )
+            for spec in specs
+        ]
         return self.add_iteration(profiled, label=label, note=note)
 
     def add_iteration(
@@ -796,15 +869,15 @@ class ProfileSession:
         """
         from .tuner import DEFAULT_BUDGET, tune as _tune
 
-        n_workers = self.workers if workers is None else max(1, int(workers))
         return _tune(
             kernel,
             budget=DEFAULT_BUDGET if budget is None else budget,
-            workers=n_workers,
             target_patterns=target_patterns,
             seed=seed,
             use_generated=use_generated,
             session=self,
+            collector=self.collector(workers),
+            cache=self.cache,
             progress=progress,
         )
 

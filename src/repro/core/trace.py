@@ -570,28 +570,80 @@ def sampled_grid(
             yield head + (mid,) + pid_tail
 
 
+def _sampled_axes(
+    grid: Tuple[int, ...], sampler: GridSampler
+) -> List[np.ndarray]:
+    """Per-dimension admitted coordinates (the sampled grid is their
+    row-major cross product)."""
+    if sampler.target is None or min(len(sampler.target), len(grid)) == 0:
+        return [np.arange(g, dtype=np.int64) for g in grid]
+    k = min(len(sampler.target), len(grid))
+    lo = sampler.target[k - 1] * sampler.window
+    hi = min(lo + sampler.window, grid[k - 1])
+    axes = [
+        np.asarray([sampler.target[d]], dtype=np.int64) for d in range(k - 1)
+    ]
+    axes.append(np.arange(lo, hi, dtype=np.int64))
+    axes.extend(np.arange(g, dtype=np.int64) for g in grid[k:])
+    return axes
+
+
 def sampled_grid_array(
     grid: Sequence[int], sampler: GridSampler
 ) -> np.ndarray:
     """Vectorized ``sampled_grid``: (P, ndim) int64 coords, row-major order."""
     grid = tuple(int(g) for g in grid)
-    ndim = len(grid)
-    if ndim == 0:
+    if len(grid) == 0:
         return np.zeros((1, 0), dtype=np.int64)
-    if sampler.target is None or min(len(sampler.target), ndim) == 0:
-        axes = [np.arange(g, dtype=np.int64) for g in grid]
-    else:
-        k = min(len(sampler.target), ndim)
-        lo = sampler.target[k - 1] * sampler.window
-        hi = min(lo + sampler.window, grid[k - 1])
-        axes = [
-            np.asarray([sampler.target[d]], dtype=np.int64)
-            for d in range(k - 1)
-        ]
-        axes.append(np.arange(lo, hi, dtype=np.int64))
-        axes.extend(np.arange(g, dtype=np.int64) for g in grid[k:])
-    mesh = np.meshgrid(*axes, indexing="ij")
+    mesh = np.meshgrid(*_sampled_axes(grid, sampler), indexing="ij")
     return np.stack([m.reshape(-1) for m in mesh], axis=1)
+
+
+def sampled_grid_size(grid: Sequence[int], sampler: GridSampler) -> int:
+    """``len(sampled_grid_array(grid, sampler))`` without materializing it.
+
+    O(ndim) — what lets the shard partitioner size its bounds (and the
+    parent process skip the full-grid walk entirely) for free.
+    """
+    grid = tuple(int(g) for g in grid)
+    if len(grid) == 0:
+        return 1
+    n = 1
+    for axis in _sampled_axes(grid, sampler):
+        n *= int(axis.shape[0])
+    return n
+
+
+def sampled_grid_slice(
+    grid: Sequence[int], sampler: GridSampler, lo: int, hi: int
+) -> np.ndarray:
+    """Rows ``[lo, hi)`` of ``sampled_grid_array``, computed directly.
+
+    Exactly ``sampled_grid_array(grid, sampler)[lo:hi]``, but O(hi-lo)
+    instead of O(total): the sampled grid is the row-major cross
+    product of the per-dimension admitted coordinates, so a contiguous
+    row run unravels arithmetically.  This is what keeps per-shard cost
+    proportional to the shard — N workers no longer each rebuild the
+    whole coordinate array just to slice out 1/N of it.
+    """
+    grid = tuple(int(g) for g in grid)
+    lo, hi = int(lo), int(hi)
+    if len(grid) == 0:
+        return np.zeros((max(hi - lo, 0), 0), dtype=np.int64)
+    axes = _sampled_axes(grid, sampler)
+    sizes = tuple(int(a.shape[0]) for a in axes)
+    total = 1
+    for s in sizes:
+        total *= s
+    lo = max(0, min(lo, total))
+    hi = max(lo, min(hi, total))
+    if hi == lo:
+        return np.zeros((0, len(grid)), dtype=np.int64)
+    flat = np.arange(lo, hi, dtype=np.int64)
+    multi = np.unravel_index(flat, sizes)
+    return np.stack(
+        [axes[d][multi[d]] for d in range(len(axes))], axis=1
+    ).astype(np.int64, copy=False)
 
 
 DynamicAccessFn = Callable[..., Iterable[Tuple[int, int]]]

@@ -41,6 +41,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from .advisor import Action
+from .cache import CollectionCache
 from .collector import KernelSpec, OperandSpec, ShardedCollector
 from .diff import HeatmapDiff, diff as diff_heatmaps
 from .heatmap import Heatmap
@@ -685,6 +686,263 @@ def _open_actions(
     return acts
 
 
+class _TuneLoop:
+    """Stepwise tuning state machine: propose -> profile -> commit.
+
+    Factors the serial :func:`tune` loop into explicit stages so
+    :func:`tune_all` can interleave many families on one shared worker
+    pool.  The loop owns every piece of deterministic state — the seeded
+    tie-break jitter, the candidate queue, the ladder floor, the current
+    best — and advances it ONLY inside :meth:`commit_baseline` /
+    :meth:`commit`, in whatever order the caller invokes them.
+    Profiling (the expensive, side-effect-free stage between a propose
+    and its commit) is the caller's job, which is exactly what makes it
+    safe to run concurrently: a trajectory depends only on the sequence
+    of committed results, never on profiling order or timing.  Driving a
+    loop propose->profile->commit one trial at a time reproduces the
+    serial :func:`tune` trajectory bit for bit.
+    """
+
+    def __init__(
+        self,
+        kernel: str,
+        *,
+        budget: int = DEFAULT_BUDGET,
+        target_patterns: Optional[Sequence[str]] = None,
+        seed: int = 0,
+        use_generated: bool = True,
+        session: Optional[ProfileSession] = None,
+        sampler: Optional[GridSampler] = None,
+        progress: Optional[Callable[[str], None]] = None,
+    ):
+        from repro import kernels as kreg
+
+        try:
+            self.entry, self.start = kreg.resolve(kernel)
+        except KeyError as e:
+            raise TuneError(str(e.args[0])) from None
+        self.budget = budget
+        self.seed = seed
+        self.target_patterns = target_patterns
+        self.use_generated = use_generated
+        self.session = session
+        self.sampler = sampler or self.entry.sampler()
+        self.say = progress or (lambda _msg: None)
+        self.t0 = time.perf_counter()
+        self._rng = np.random.default_rng(seed)
+        self._jitter: Dict[str, float] = {}
+        self.tried: set = {self.start.name}
+        self.steps: List[TuneStep] = []
+        self.queue: List[Candidate] = []
+        self.baseline: Optional[ProfiledKernel] = None
+        self.baseline_iter = ""
+        self.best: Optional[ProfiledKernel] = None
+        self._best_spec: Optional[KernelSpec] = None
+        self._best_ctx: Optional[Dict[str, np.ndarray]] = None
+        self._variant_names = [v.name for v in self.entry.variants]
+        self._ladder_floor = (
+            self._variant_names.index(self.start.name) + 1
+        )
+        self._cum_map: Dict[str, str] = {}
+
+    def _order_key(self, c: Candidate):
+        if c.label not in self._jitter:
+            self._jitter[c.label] = float(self._rng.random())
+        return (
+            -c.predicted_saving,
+            0 if c.source == "ladder" else 1,
+            c.order,
+            self._jitter[c.label],
+            c.label,
+        )
+
+    def baseline_build(self):
+        """Build the baseline (spec, dynamic_context) to profile first."""
+        from repro import kernels as kreg
+
+        return kreg.build(f"{self.entry.name}:{self.start.name}")
+
+    def commit_baseline(
+        self,
+        pk: ProfiledKernel,
+        spec: KernelSpec,
+        ctx: Optional[Dict[str, np.ndarray]],
+    ) -> None:
+        """Install the profiled baseline and generate the first queue."""
+        self.baseline = pk
+        self.say(
+            f"baseline {self.entry.name}:{self.start.name}: "
+            f"{pk.transactions} transfers"
+        )
+        if self.session is not None:
+            it = self.session.add_iteration(
+                [pk],
+                label=f"tune-{self.entry.name}-baseline",
+                tuning={
+                    "family": self.entry.name,
+                    "step": 0,
+                    "role": "baseline",
+                    "budget": self.budget,
+                    "seed": self.seed,
+                    "candidate": None,
+                    "accepted": True,
+                },
+            )
+            self.baseline_iter = it.path.name
+        self.best, self._best_spec, self._best_ctx = pk, spec, ctx
+        self.queue = self._generate()
+
+    def _generate(self) -> List[Candidate]:
+        acts = _open_actions(self.best, self.target_patterns)
+        if not acts:  # every targeted pattern is fixed: converged
+            return []
+        cands = ladder_candidates(
+            self.entry,
+            frozenset(self.tried),
+            acts,
+            min_position=self._ladder_floor,
+        )
+        if self.use_generated:
+            for act in acts:
+                cands += candidates_for_action(
+                    act, self._best_spec, self._best_ctx
+                )
+        # dedupe by label: against already-profiled steps AND within
+        # this batch (two actions can spawn the same transform, e.g.
+        # pin(B) from both a hot and a reorder_grid action)
+        seen = {s.candidate.label for s in self.steps}
+        uniq = []
+        for c in cands:
+            if c.label not in seen:
+                seen.add(c.label)
+                uniq.append(c)
+        uniq.sort(key=self._order_key)
+        return uniq
+
+    def propose(
+        self,
+    ) -> Optional[
+        Tuple[Candidate, KernelSpec, Optional[Dict[str, np.ndarray]]]
+    ]:
+        """Pop the next buildable candidate, or ``None`` when finished.
+
+        Candidates that fail to build are skipped without consuming
+        budget, exactly as in the serial loop.  ``None`` means the queue
+        is empty (converged) or this loop's budget is spent.
+        """
+        while self.queue and len(self.steps) < self.budget:
+            cand = self.queue.pop(0)
+            if cand.variant:
+                self.tried.add(cand.variant)
+            try:
+                cspec, cctx = cand.build()
+            except Exception as e:  # a candidate that fails to build is skipped
+                self.say(
+                    f"step {len(self.steps) + 1}: {cand.label} "
+                    f"failed to build ({e})"
+                )
+                continue
+            return cand, cspec, cctx
+        return None
+
+    def commit(
+        self,
+        cand: Candidate,
+        cspec: KernelSpec,
+        cctx: Optional[Dict[str, np.ndarray]],
+        pk: ProfiledKernel,
+    ) -> TuneStep:
+        """Judge one profiled candidate and advance the loop state."""
+        step_map = _effective_region_map(
+            dict(cand.region_map), self.best.heatmap, pk.heatmap
+        )
+        d = diff_heatmaps(self.best.heatmap, pk.heatmap, region_map=step_map)
+        accepted = _accepts(d, self.best.heatmap, pk.heatmap)
+        step_no = len(self.steps) + 1
+        iter_name = ""
+        if self.session is not None:
+            it = self.session.add_iteration(
+                [pk],
+                label=f"tune-{self.entry.name}-step{step_no}",
+                tuning={
+                    "family": self.entry.name,
+                    "step": step_no,
+                    "role": "candidate",
+                    "budget": self.budget,
+                    "seed": self.seed,
+                    "baseline": self.baseline_iter,
+                    "candidate": cand.provenance(),
+                    "verdict": d.verdict,
+                    "speedup_vs_parent": d.speedup_estimate,
+                    "fixed": [list(p) for p in d.fixed],
+                    "introduced": [list(p) for p in d.introduced],
+                    "accepted": accepted,
+                },
+            )
+            iter_name = it.path.name
+        step = TuneStep(
+            step=step_no,
+            candidate=cand,
+            profiled=pk,
+            diff=d,
+            accepted=accepted,
+            iteration=iter_name,
+        )
+        self.steps.append(step)
+        self.say(
+            f"step {step_no}: {cand.label} -> {pk.transactions} "
+            f"transfers ({d.verdict})"
+            + (" [accepted]" if accepted else "")
+        )
+        if accepted:
+            self.best, self._best_spec, self._best_ctx = pk, cspec, cctx
+            if (
+                cand.source == "ladder"
+                and cand.variant in self._variant_names
+            ):
+                # the ladder is walked forward, never revisited
+                self._ladder_floor = (
+                    self._variant_names.index(cand.variant) + 1
+                )
+            self._cum_map.update(step_map)
+            self.queue = self._generate()
+        return step
+
+    def result(self) -> TuneResult:
+        """Freeze the trajectory into a :class:`TuneResult`."""
+        final = diff_heatmaps(
+            self.baseline.heatmap,
+            self.best.heatmap,
+            region_map=_effective_region_map(
+                self._cum_map, self.baseline.heatmap, self.best.heatmap
+            ),
+        )
+        best_label = "baseline"
+        for s in self.steps:
+            if s.accepted:
+                best_label = s.candidate.label
+        # converged = nothing left to try: every targeted pattern is
+        # fixed, or no candidate can be generated for the ones that
+        # remain (as opposed to stopping with untried candidates when
+        # budget ran out)
+        converged = not self.queue
+        return TuneResult(
+            kernel=self.entry.name,
+            baseline=self.baseline,
+            best=self.best,
+            best_label=best_label,
+            steps=tuple(self.steps),
+            final=final,
+            converged=converged,
+            budget=self.budget,
+            seed=self.seed,
+            wall_s=time.perf_counter() - self.t0,
+            baseline_iteration=(
+                self.baseline_iter if self.session is not None else ""
+            ),
+        )
+
+
 def tune(
     kernel: str,
     *,
@@ -696,6 +954,7 @@ def tune(
     session: Optional[ProfileSession] = None,
     sampler: Optional[GridSampler] = None,
     collector: Optional[ShardedCollector] = None,
+    cache: Optional["CollectionCache"] = None,
     progress: Optional[Callable[[str], None]] = None,
 ) -> TuneResult:
     """Close the paper's tuning loop unattended for one kernel family.
@@ -713,195 +972,234 @@ def tune(
     ``seed`` fixes the candidate tie-break order — two runs with the
     same arguments and seed produce identical trajectories.  ``workers``
     / ``collector`` shard candidate re-profiling exactly like
-    :meth:`ProfileSession.profile`.
+    :meth:`ProfileSession.profile`; ``cache`` (a
+    :class:`~repro.core.cache.CollectionCache`) serves repeated
+    candidates bit-identical cached heat maps instead of re-tracing.
     """
-    from repro import kernels as kreg
-
-    try:
-        entry, start = kreg.resolve(kernel)
-    except KeyError as e:
-        raise TuneError(str(e.args[0])) from None
-    say = progress or (lambda _msg: None)
-    rng = np.random.default_rng(seed)
-    jitter: Dict[str, float] = {}
-
-    def order_key(c: Candidate):
-        if c.label not in jitter:
-            jitter[c.label] = float(rng.random())
-        return (
-            -c.predicted_saving,
-            0 if c.source == "ladder" else 1,
-            c.order,
-            jitter[c.label],
-            c.label,
-        )
-
+    loop = _TuneLoop(
+        kernel,
+        budget=budget,
+        target_patterns=target_patterns,
+        seed=seed,
+        use_generated=use_generated,
+        session=session,
+        sampler=sampler,
+        progress=progress,
+    )
     own_collector = False
     if collector is None and workers > 1:
         collector = ShardedCollector(workers)
         own_collector = True
-    sampler = sampler or entry.sampler()
-    t0 = time.perf_counter()
-    tried: set = {start.name}
     try:
-        spec, ctx = kreg.build(f"{entry.name}:{start.name}")
-        baseline = profile_kernel(
+        spec, ctx = loop.baseline_build()
+        pk = profile_kernel(
             spec,
-            sampler,
+            loop.sampler,
             ctx,
-            name=entry.name,
-            variant=start.name,
-            region_map=entry.region_map,
+            name=loop.entry.name,
+            variant=loop.start.name,
+            region_map=loop.entry.region_map,
             collector=collector,
+            cache=cache,
         )
-        say(
-            f"baseline {entry.name}:{start.name}: "
-            f"{baseline.transactions} transfers"
-        )
-        baseline_iter = ""
-        if session is not None:
-            it = session.add_iteration(
-                [baseline],
-                label=f"tune-{entry.name}-baseline",
-                tuning={
-                    "family": entry.name,
-                    "step": 0,
-                    "role": "baseline",
-                    "budget": budget,
-                    "seed": seed,
-                    "candidate": None,
-                    "accepted": True,
-                },
-            )
-            baseline_iter = it.path.name
-
-        best, best_spec, best_ctx = baseline, spec, ctx
-        variant_names = [v.name for v in entry.variants]
-        ladder_floor = variant_names.index(start.name) + 1
-        cum_map: Dict[str, str] = {}
-        steps: List[TuneStep] = []
-
-        def generate() -> List[Candidate]:
-            acts = _open_actions(best, target_patterns)
-            if not acts:  # every targeted pattern is fixed: converged
-                return []
-            cands = ladder_candidates(
-                entry, frozenset(tried), acts, min_position=ladder_floor
-            )
-            if use_generated:
-                for act in acts:
-                    cands += candidates_for_action(act, best_spec, best_ctx)
-            # dedupe by label: against already-profiled steps AND within
-            # this batch (two actions can spawn the same transform, e.g.
-            # pin(B) from both a hot and a reorder_grid action)
-            seen = {s.candidate.label for s in steps}
-            uniq = []
-            for c in cands:
-                if c.label not in seen:
-                    seen.add(c.label)
-                    uniq.append(c)
-            uniq.sort(key=order_key)
-            return uniq
-
-        queue = generate()
-        while queue and len(steps) < budget:
-            cand = queue.pop(0)
-            if cand.variant:
-                tried.add(cand.variant)
-            try:
-                cspec, cctx = cand.build()
-            except Exception as e:  # a candidate that fails to build is skipped
-                say(f"step {len(steps) + 1}: {cand.label} failed to build ({e})")
-                continue
+        loop.commit_baseline(pk, spec, ctx)
+        while True:
+            trial = loop.propose()
+            if trial is None:
+                break
+            cand, cspec, cctx = trial
             pk = profile_kernel(
                 cspec,
-                sampler,
+                loop.sampler,
                 cctx,
-                name=entry.name,
+                name=loop.entry.name,
                 variant=cand.label,
                 region_map=cand.region_map,
                 collector=collector,
+                cache=cache,
             )
-            step_map = _effective_region_map(
-                dict(cand.region_map), best.heatmap, pk.heatmap
-            )
-            d = diff_heatmaps(best.heatmap, pk.heatmap, region_map=step_map)
-            accepted = _accepts(d, best.heatmap, pk.heatmap)
-            step_no = len(steps) + 1
-            iter_name = ""
-            if session is not None:
-                it = session.add_iteration(
-                    [pk],
-                    label=f"tune-{entry.name}-step{step_no}",
-                    tuning={
-                        "family": entry.name,
-                        "step": step_no,
-                        "role": "candidate",
-                        "budget": budget,
-                        "seed": seed,
-                        "baseline": baseline_iter,
-                        "candidate": cand.provenance(),
-                        "verdict": d.verdict,
-                        "speedup_vs_parent": d.speedup_estimate,
-                        "fixed": [list(p) for p in d.fixed],
-                        "introduced": [list(p) for p in d.introduced],
-                        "accepted": accepted,
-                    },
-                )
-                iter_name = it.path.name
-            steps.append(
-                TuneStep(
-                    step=step_no,
-                    candidate=cand,
-                    profiled=pk,
-                    diff=d,
-                    accepted=accepted,
-                    iteration=iter_name,
-                )
-            )
-            say(
-                f"step {step_no}: {cand.label} -> {pk.transactions} "
-                f"transfers ({d.verdict})"
-                + (" [accepted]" if accepted else "")
-            )
-            if accepted:
-                best, best_spec, best_ctx = pk, cspec, cctx
-                if cand.source == "ladder" and cand.variant in variant_names:
-                    # the ladder is walked forward, never revisited
-                    ladder_floor = variant_names.index(cand.variant) + 1
-                cum_map.update(step_map)
-                queue = generate()
+            loop.commit(cand, cspec, cctx, pk)
     finally:
         if own_collector and collector is not None:
             collector.close()
+    return loop.result()
 
-    final = diff_heatmaps(
-        baseline.heatmap,
-        best.heatmap,
-        region_map=_effective_region_map(
-            cum_map, baseline.heatmap, best.heatmap
-        ),
+
+@dataclasses.dataclass(frozen=True)
+class TuneAllResult:
+    """Outcome of one :func:`tune_all` run across many families."""
+
+    results: Tuple[TuneResult, ...]  # one per family, input order
+    budget: int  # the GLOBAL candidate budget
+    spent: int  # candidate profiles actually consumed
+    rounds: int  # scheduler rounds executed
+    seed: int
+    wall_s: float
+
+    def as_dict(self) -> dict:
+        """JSON-ready view (the BENCH_tune.json ``tune_all`` block)."""
+        return {
+            "budget": self.budget,
+            "spent": self.spent,
+            "rounds": self.rounds,
+            "seed": self.seed,
+            "wall_s": self.wall_s,
+            "results": [r.as_dict() for r in self.results],
+        }
+
+    def summary(self) -> str:
+        """Human-readable digest (the ``cuthermo tune --all`` body)."""
+        lines = [
+            f"== tune --all: {len(self.results)} families, "
+            f"global budget {self.budget} "
+            f"({self.spent} spent over {self.rounds} rounds) =="
+        ]
+        for r in self.results:
+            status = "converged" if r.converged else "budget exhausted"
+            lines.append(
+                f"  {r.kernel}: {r.final.tx_before} -> "
+                f"{r.final.tx_after} transfers ({r.speedup:.2f}x, "
+                f"best {r.best_label}, {len(r.steps)} tried, {status})"
+            )
+        return "\n".join(lines)
+
+
+def tune_all(
+    kernels: Optional[Sequence[str]] = None,
+    *,
+    budget: int = DEFAULT_BUDGET,
+    workers: int = 1,
+    target_patterns: Optional[Sequence[str]] = None,
+    seed: int = 0,
+    use_generated: bool = True,
+    session: Optional[ProfileSession] = None,
+    collector: Optional[ShardedCollector] = None,
+    cache: Optional["CollectionCache"] = None,
+    progress: Optional[Callable[[str], None]] = None,
+    max_threads: Optional[int] = None,
+) -> TuneAllResult:
+    """Tune many families concurrently under ONE global candidate budget.
+
+    Each family runs its own :class:`_TuneLoop`; the scheduler works in
+    rounds.  Every round it asks each still-active family (in input
+    order) to propose its next candidate until the global budget is
+    reserved, profiles the whole batch concurrently on a thread pool
+    over the SHARED ``collector`` pool and ``cache``, then commits the
+    results back into their loops in family order — *ordered result
+    commitment*.  Because a loop's trajectory depends only on the
+    sequence of results committed into it (never on profiling timing)
+    and commits happen in a deterministic order, two ``tune_all`` runs
+    with the same arguments and seed produce identical trajectories —
+    and each family's trajectory is the one the serial :func:`tune`
+    would have produced with the same seed, as long as the global
+    budget does not cut it short.
+
+    ``kernels`` defaults to every registry family.  ``budget`` caps the
+    TOTAL candidate profiles across all families (baselines are free,
+    matching :func:`tune`); a family that converges stops proposing and
+    its unused share flows to the rest.  ``session`` iterations are
+    committed sequentially in the scheduler thread, so iteration
+    numbering is deterministic too.
+    """
+    import concurrent.futures
+
+    from repro import kernels as kreg
+
+    if kernels is None:
+        kernels = list(kreg.names())
+    if not kernels:
+        raise TuneError("tune_all needs at least one kernel family")
+    say = progress or (lambda _msg: None)
+
+    def family_progress(name: str) -> Callable[[str], None]:
+        return lambda msg: say(f"[{name}] {msg}")
+
+    loops = [
+        _TuneLoop(
+            k,
+            budget=budget,
+            target_patterns=target_patterns,
+            seed=seed,
+            use_generated=use_generated,
+            session=session,
+            progress=family_progress(k),
+        )
+        for k in kernels
+    ]
+    own_collector = False
+    if collector is None and workers > 1:
+        collector = ShardedCollector(workers)
+        own_collector = True
+    t0 = time.perf_counter()
+    spent = 0
+    rounds = 0
+    threads = max_threads or min(len(loops), 8)
+    pool = concurrent.futures.ThreadPoolExecutor(
+        max_workers=threads, thread_name_prefix="tune-all"
     )
-    best_label = "baseline"
-    for s in steps:
-        if s.accepted:
-            best_label = s.candidate.label
-    # converged = nothing left to try: every targeted pattern is fixed,
-    # or no candidate can be generated for the ones that remain (as
-    # opposed to stopping with untried candidates when budget ran out)
-    converged = not queue
-    return TuneResult(
-        kernel=entry.name,
-        baseline=baseline,
-        best=best,
-        best_label=best_label,
-        steps=tuple(steps),
-        final=final,
-        converged=converged,
+
+    def submit(loop, spec, ctx, variant, region_map):
+        return pool.submit(
+            profile_kernel,
+            spec,
+            loop.sampler,
+            ctx,
+            name=loop.entry.name,
+            variant=variant,
+            region_map=region_map,
+            collector=collector,
+            cache=cache,
+        )
+
+    try:
+        # round 0: every baseline profiles concurrently (they are free —
+        # budget counts candidates), commits land in family order
+        builds = [loop.baseline_build() for loop in loops]
+        futs = [
+            submit(loop, spec, ctx, loop.start.name, loop.entry.region_map)
+            for loop, (spec, ctx) in zip(loops, builds)
+        ]
+        for loop, (spec, ctx), fut in zip(loops, builds, futs):
+            loop.commit_baseline(fut.result(), spec, ctx)
+
+        active = list(loops)
+        while active and spent < budget:
+            rounds += 1
+            batch = []  # (loop, cand, spec, ctx)
+            still = []
+            for loop in active:
+                if spent + len(batch) >= budget:
+                    still.append(loop)  # no slot this round, stay active
+                    continue
+                trial = loop.propose()
+                if trial is None:
+                    continue  # converged: drops out of the schedule
+                batch.append((loop, *trial))
+                still.append(loop)
+            active = still
+            if not batch:
+                break
+            futs = [
+                submit(loop, cspec, cctx, cand.label, cand.region_map)
+                for loop, cand, cspec, cctx in batch
+            ]
+            # ordered result commitment: profiling may finish in any
+            # order, state only advances here, in family order
+            for (loop, cand, cspec, cctx), fut in zip(batch, futs):
+                loop.commit(cand, cspec, cctx, fut.result())
+                spent += 1
+    finally:
+        pool.shutdown()
+        if own_collector and collector is not None:
+            collector.close()
+
+    return TuneAllResult(
+        results=tuple(loop.result() for loop in loops),
         budget=budget,
+        spent=spent,
+        rounds=rounds,
         seed=seed,
         wall_s=time.perf_counter() - t0,
-        baseline_iteration=baseline_iter if session is not None else "",
     )
 
 
@@ -1001,6 +1299,7 @@ def trajectories_from_session(session: ProfileSession) -> List[dict]:
 __all__ = [
     "Candidate",
     "DEFAULT_BUDGET",
+    "TuneAllResult",
     "TuneError",
     "TuneResult",
     "TuneStep",
@@ -1013,4 +1312,5 @@ __all__ = [
     "transpose_spec",
     "trajectories_from_session",
     "tune",
+    "tune_all",
 ]

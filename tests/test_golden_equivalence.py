@@ -381,6 +381,22 @@ def test_sharded_collector_inprocess_bit_identical():
         assert_heatmaps_identical(sharded, serial)
 
 
+def test_collection_cache_hits_bit_identical(tmp_path):
+    """GOLDEN: a cache hit — memory tier or a fresh process's disk tier —
+    reproduces the freshly collected heat map exactly, for every shard
+    case (operand walks, dynamic gathers, scratch accumulators)."""
+    from repro.core.cache import CollectionCache, spec_content_hash
+
+    cache = CollectionCache(tmp_path / "cache")
+    for spec, ctx in _shard_cases():
+        serial = analyze(spec, GridSampler(None), dynamic_context=ctx)
+        key = spec_content_hash(spec, GridSampler(None), ctx)
+        cache.put(key, serial)
+        assert_heatmaps_identical(cache.get(key), serial)  # memory tier
+        rebooted = CollectionCache(tmp_path / "cache")  # fresh process
+        assert_heatmaps_identical(rebooted.get(key), serial)
+
+
 try:
     from hypothesis import given, settings, strategies as st
 

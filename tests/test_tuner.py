@@ -12,6 +12,7 @@ from repro.core.session import ARTIFACT_VERSION, ProfileSession
 from repro.core.trace import GridSampler
 from repro.core.tuner import (
     VMEM_PIN_BUDGET_BYTES,
+    TuneError,
     align_spec,
     candidates_for_action,
     drop_scratch_spec,
@@ -20,6 +21,7 @@ from repro.core.tuner import (
     retile_spec,
     transpose_spec,
     tune,
+    tune_all,
     trajectories_from_session,
 )
 
@@ -374,3 +376,105 @@ def test_non_tuned_iterations_have_no_tuning(tmp_path):
     it = sess.profile([gemm_v00_spec(128, 128, 128)])
     assert it.tuning is None
     assert trajectories_from_session(sess) == []
+
+
+# -- the concurrent tune scheduler -------------------------------------------
+
+
+def test_tune_all_single_family_matches_serial():
+    """With one family the scheduler degenerates to the serial loop."""
+    serial = tune("gramschm", budget=3, seed=7)
+    sched = tune_all(["gramschm"], budget=3, seed=7)
+    (res,) = sched.results
+    assert [s.candidate.label for s in res.steps] == [
+        s.candidate.label for s in serial.steps
+    ]
+    assert [s.accepted for s in res.steps] == [
+        s.accepted for s in serial.steps
+    ]
+    assert res.best_label == serial.best_label
+    assert res.best.transactions == serial.best.transactions
+
+
+def test_tune_all_matches_serial_when_budget_ample():
+    """Ordered result commitment: each family's trajectory is the one
+    serial ``tune`` produces, as long as the global budget never cuts a
+    family short (both converge well under 10 candidates)."""
+    sched = tune_all(["gramschm", "ttm"], budget=10, seed=0)
+    for res in sched.results:
+        assert res.converged
+        serial = tune(res.kernel, budget=10, seed=0)
+        assert [s.candidate.label for s in res.steps] == [
+            s.candidate.label for s in serial.steps
+        ]
+        assert res.best.transactions == serial.best.transactions
+
+
+def test_tune_all_is_deterministic_per_seed():
+    a = tune_all(["gramschm", "ttm"], budget=4, seed=42)
+    b = tune_all(["gramschm", "ttm"], budget=4, seed=42)
+    sig = lambda r: [  # noqa: E731
+        (s.candidate.label, s.accepted, s.transactions) for s in r.steps
+    ]
+    assert [sig(r) for r in a.results] == [sig(r) for r in b.results]
+    assert a.spent == b.spent and a.rounds == b.rounds
+
+
+def test_tune_all_enforces_one_global_budget():
+    """budget=2 across two families: one candidate each (round-robin in
+    family order), baselines excluded from the count."""
+    res = tune_all(["gramschm", "ttm"], budget=2, seed=0)
+    assert res.spent == 2
+    assert [len(r.steps) for r in res.results] == [1, 1]
+    assert res.rounds == 1
+
+
+def test_tune_all_budget_zero_profiles_baselines_only():
+    res = tune_all(["gramschm", "ttm"], budget=0, seed=0)
+    assert res.spent == 0
+    assert all(not r.steps for r in res.results)
+    assert all(r.best_label == "baseline" for r in res.results)
+
+
+def test_tune_all_empty_family_list_raises():
+    with pytest.raises(TuneError):
+        tune_all([], budget=2)
+
+
+def test_tune_all_persists_linked_provenance(tmp_path):
+    """Session iterations commit in family order with baseline links,
+    and every step records the iteration that stored it."""
+    sess = ProfileSession(tmp_path / "sess")
+    res = tune_all(["gramschm", "ttm"], budget=2, seed=0, session=sess)
+    # 2 baselines + 2 candidates, committed deterministically
+    assert sess.iteration_names() == ["iter0", "iter1", "iter2", "iter3"]
+    assert sess.iteration(0).tuning["family"] == "gramschm"
+    assert sess.iteration(1).tuning["family"] == "ttm"
+    for r in res.results:
+        assert r.baseline_iteration
+        for s in r.steps:
+            assert s.iteration  # the satellite fix: never ""
+            it = sess.iteration(sess.iteration_names().index(s.iteration))
+            assert it.tuning["baseline"] == r.baseline_iteration
+            assert it.tuning["candidate"]["label"] == s.candidate.label
+    trajs = trajectories_from_session(
+        ProfileSession(tmp_path / "sess", create=False)
+    )
+    assert sorted(t["kernel"] for t in trajs) == ["gramschm", "ttm"]
+    for traj in trajs:
+        assert all(s["iteration"] for s in traj["steps"])
+
+
+def test_tune_all_shared_cache_bounds_fresh_traces(tmp_path):
+    """A repeated tune --all run re-traces nothing: every profile
+    (baselines included) is served from the shared cache."""
+    from repro.core.cache import CollectionCache
+
+    cache = CollectionCache(tmp_path / "cache")
+    tune_all(["gramschm", "ttm"], budget=2, seed=0, cache=cache)
+    before_miss = cache.stats.misses
+    res = tune_all(["gramschm", "ttm"], budget=2, seed=0, cache=cache)
+    fresh = cache.stats.misses - before_miss
+    profiles = res.spent + len(res.results)  # candidates + baselines
+    assert fresh == 0
+    assert cache.stats.hits >= profiles
