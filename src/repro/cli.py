@@ -10,6 +10,12 @@ Subcommands (see ``docs/cli.md`` for transcripts):
   gallery + markdown digest + CSVs) for a stored iteration.
 * ``cuthermo diff sess/iter0 sess/iter1`` — align two iterations and
   print per-kernel improved/regressed/fixed-pattern verdicts.
+* ``cuthermo check sess/ --baseline artifacts/ci-baseline`` — the
+  regression gate: evaluate a candidate iteration against a baseline
+  artifact under configurable thresholds and/or scan a session's own
+  rolling history for anomalies (``--anomaly``), emit a
+  schema-versioned JSON report, and exit 0 (pass) / 1 (gate failure) /
+  2 (usage or load error).
 * ``cuthermo tune gemm --out sess/`` — close the loop unattended: map
   advisor actions to candidate variants, re-profile, keep improvements,
   repeat until the patterns are fixed or the budget runs out.
@@ -139,6 +145,81 @@ def _build_parser() -> argparse.ArgumentParser:
         help="exit 1 when any kernel regressed (CI gating)",
     )
     df.set_defaults(func=_cmd_diff)
+
+    ck = sub.add_parser(
+        "check",
+        help="gate a candidate iteration against a baseline artifact "
+        "and/or its own session history (exit 0 pass / 1 fail / 2 error)",
+    )
+    ck.add_argument(
+        "candidate",
+        help="candidate iteration directory, or a session directory "
+        "(its latest iteration is gated; --anomaly needs a session)",
+    )
+    ck.add_argument(
+        "--baseline",
+        "-b",
+        default=None,
+        metavar="DIR",
+        help="baseline iteration (or session) directory to gate against",
+    )
+    ck.add_argument(
+        "--anomaly",
+        action="store_true",
+        help="also flag kernels whose latest heat map leaves their own "
+        "rolling median/MAD history bands (candidate must be a session "
+        "directory with enough iterations)",
+    )
+    ck.add_argument(
+        "--threshold",
+        "-t",
+        action="append",
+        default=[],
+        metavar="KEY=VALUE",
+        help="gate budget (repeatable): transfer-pct, aggregate-pct, "
+        "scratch-pct, severity (floats); new-patterns, missing (on|off); "
+        "allow-pattern=NAME (exempt a pattern class); defaults are "
+        "strict (zero tolerated growth)",
+    )
+    ck.add_argument(
+        "--region-map",
+        action="append",
+        default=[],
+        metavar="KERNEL:OLD=NEW",
+        help="rename a region between baseline and candidate "
+        "(repeatable), e.g. 'gramschm:q=qT'",
+    )
+    ck.add_argument(
+        "--json",
+        default=None,
+        metavar="PATH",
+        help="write the schema-versioned JSON report to PATH "
+        "('-' for stdout; the human summary then moves to stderr)",
+    )
+    ck.add_argument(
+        "--min-history",
+        type=int,
+        default=None,
+        metavar="N",
+        help="anomaly bands need N prior iterations (default: 3)",
+    )
+    ck.add_argument(
+        "--nmads",
+        type=float,
+        default=None,
+        metavar="X",
+        help="anomaly band half-width in scaled MADs (default: 4.0)",
+    )
+    ck.add_argument(
+        "--include-rejected",
+        action="store_true",
+        help="band anomaly history over tuner-rejected candidates too",
+    )
+    ck.add_argument(
+        "--quiet", "-q", action="store_true",
+        help="suppress the human summary (exit code + JSON only)",
+    )
+    ck.set_defaults(func=_cmd_check)
 
     tn = sub.add_parser(
         "tune",
@@ -438,7 +519,23 @@ def _cmd_report(args: argparse.Namespace) -> int:
     entries = [ReportEntry.from_profiled(pk) for pk in kernels]
     out = args.out or os.path.join(str(it.path), "report")
     title = args.title or f"cuthermo report — {it.label}"
-    written = write_report_bundle(entries, out, title=title, tuning=tuning)
+    # fold in the latest `cuthermo check` verdict when one was stored
+    # next to the iteration (tolerate a corrupt/foreign file: the check
+    # section is additive, never a reason to fail the bundle)
+    check = None
+    check_path = it.path / "check.json"
+    if check_path.is_file():
+        import json as _json
+
+        try:
+            doc = _json.loads(check_path.read_text())
+            if isinstance(doc, dict) and doc.get("format") == "cuthermo-check":
+                check = doc
+        except (OSError, ValueError):
+            check = None
+    written = write_report_bundle(
+        entries, out, title=title, tuning=tuning, check=check
+    )
     print(f"wrote {written['index.html']}")
     print(f"wrote {written['report.md']}")
     return 0
@@ -536,12 +633,14 @@ def _cmd_tune(args: argparse.Namespace) -> int:
     return 0
 
 
-def _cmd_diff(args: argparse.Namespace) -> int:
-    """Handler for ``cuthermo diff``."""
-    from repro.core.session import SessionError, diff_iterations, load_iteration
+def _parse_region_maps(specs):
+    """Parse repeated ``--region-map KERNEL:OLD=NEW`` flags.
 
-    region_maps = {}
-    for spec in args.region_map:
+    Returns the nested mapping, or None (after printing to stderr) on a
+    malformed spec — callers turn that into exit code 2.
+    """
+    region_maps: dict = {}
+    for spec in specs:
         try:
             kernel, rename = spec.split(":", 1)
             old, new = rename.split("=", 1)
@@ -551,8 +650,22 @@ def _cmd_diff(args: argparse.Namespace) -> int:
                 "(expected KERNEL:OLD=NEW)",
                 file=sys.stderr,
             )
-            return 2
+            return None
         region_maps.setdefault(kernel, {})[old] = new
+    return region_maps
+
+
+def _cmd_diff(args: argparse.Namespace) -> int:
+    """Handler for ``cuthermo diff``.
+
+    Exit-code contract (same as ``check``): 0 no regression, 1 gate
+    failure under ``--fail-on-regression``, 2 usage or load error.
+    """
+    from repro.core.session import SessionError, diff_iterations, load_iteration
+
+    region_maps = _parse_region_maps(args.region_map)
+    if region_maps is None:
+        return 2
     try:
         before = load_iteration(args.before)
         after = load_iteration(args.after)
@@ -564,6 +677,104 @@ def _cmd_diff(args: argparse.Namespace) -> int:
     if args.fail_on_regression and sd.regressed:
         return 1
     return 0
+
+
+def _cmd_check(args: argparse.Namespace) -> int:
+    """Handler for ``cuthermo check``.
+
+    Exit-code contract: 0 every gate held, 1 at least one gate failed
+    (threshold blown, new/worsened pattern, missing kernel, anomaly
+    flag), 2 usage or load error (bad flags, unreadable artifacts).
+    """
+    import json as _json
+    import os
+
+    from repro.core.check import (
+        CheckError,
+        CheckThresholds,
+        check_iterations,
+        check_session_anomalies,
+        merge_reports,
+    )
+    from repro.core.session import ProfileSession, SessionError
+
+    if not args.baseline and not args.anomaly:
+        print(
+            "cuthermo check: nothing to gate against "
+            "(pass --baseline DIR and/or --anomaly)",
+            file=sys.stderr,
+        )
+        return 2
+    region_maps = _parse_region_maps(args.region_map)
+    if region_maps is None:
+        return 2
+    try:
+        thresholds = CheckThresholds.from_specs(args.threshold)
+    except CheckError as e:
+        print(f"cuthermo: {e}", file=sys.stderr)
+        return 2
+
+    report = None
+    candidate_it = None
+    try:
+        if args.baseline:
+            baseline = _resolve_iteration_dir(args.baseline)
+            candidate_it = _resolve_iteration_dir(args.candidate)
+            report = check_iterations(
+                baseline,
+                candidate_it,
+                thresholds=thresholds,
+                region_maps=region_maps,
+            )
+        if args.anomaly:
+            if not os.path.isfile(
+                os.path.join(args.candidate, "session.json")
+            ):
+                print(
+                    f"cuthermo: --anomaly needs a session directory, and "
+                    f"{args.candidate!r} has no session.json",
+                    file=sys.stderr,
+                )
+                return 2
+            sess = ProfileSession(args.candidate, create=False)
+            kwargs = {"include_rejected": args.include_rejected}
+            if args.min_history is not None:
+                kwargs["min_history"] = args.min_history
+            if args.nmads is not None:
+                kwargs["nmads"] = args.nmads
+            anomaly_report = check_session_anomalies(sess, **kwargs)
+            report = (
+                merge_reports(report, anomaly_report)
+                if report is not None
+                else anomaly_report
+            )
+    except (CheckError, SessionError) as e:
+        print(f"cuthermo: {e}", file=sys.stderr)
+        return 2
+
+    doc = report.as_dict()
+    # drop a copy next to the candidate artifact so `cuthermo report`
+    # can fold the verdict into the bundle; best-effort (a read-only
+    # artifact tree must not turn a clean gate into an error)
+    if candidate_it is not None:
+        try:
+            (candidate_it.path / "check.json").write_text(
+                _json.dumps(doc, indent=2) + "\n"
+            )
+        except OSError:
+            pass
+    if args.json == "-":
+        print(_json.dumps(doc, indent=2))
+        if not args.quiet:
+            print(report.summary(), file=sys.stderr)
+    else:
+        if args.json:
+            with open(args.json, "w") as fh:
+                _json.dump(doc, fh, indent=2)
+                fh.write("\n")
+        if not args.quiet:
+            print(report.summary())
+    return 0 if report.passed else 1
 
 
 def main(argv: Optional[List[str]] = None) -> int:

@@ -464,6 +464,22 @@ class Heatmap:
         )
         return moved / demanded
 
+    def scratch_words(self) -> int:
+        """Word touches on VMEM-scratch regions (the scratch-cost gauge).
+
+        Scratch never crosses the HBM boundary, so it is excluded from
+        :meth:`sector_transactions`; it still costs VMEM capacity and
+        bandwidth, which is why the tuner and the ``cuthermo check``
+        regression gate track its growth separately.
+        """
+        return int(
+            sum(
+                int(rh.word_temps_matrix.sum())
+                for rh in self.regions
+                if rh.region.space == "vmem_scratch"
+            )
+        )
+
     def summary_stats(self) -> Dict[str, object]:
         """JSON-ready profile summary (session manifests, report digests).
 
@@ -481,6 +497,7 @@ class Heatmap:
             "transactions": self.sector_transactions(),
             "demanded_words": self.useful_word_transactions(),
             "waste_ratio": self.waste_ratio(),
+            "scratch_words": self.scratch_words(),
             "regions": {
                 rh.region.name: {
                     "space": rh.region.space,

@@ -415,11 +415,124 @@ def _tuning_section_html(trajectories: Sequence[Mapping]) -> str:
     return "".join(parts)
 
 
+def _check_section_html(check: Mapping) -> str:
+    """Check-verdict section of the HTML bundle.
+
+    ``check`` is a check-report document — ``CheckReport.as_dict()``
+    output, or the ``check.json`` that ``cuthermo check`` drops next to
+    the candidate iteration.  Renders the gate outcome, the per-kernel
+    rows, and any anomaly flags.
+    """
+    if not check:
+        return ""
+    passed = bool(check.get("passed"))
+    vclass = "verdict-improved" if passed else "verdict-regressed"
+    verdict = "passed" if passed else "FAILED"
+    parts = [
+        "<h3>regression check</h3>",
+        f"<div class='card'><p>gate <b class='{vclass}'>{verdict}</b> "
+        f"[{_html.escape(str(check.get('mode', '')))}] "
+        f"candidate <b>{_html.escape(str(check.get('candidate', '')))}</b>"
+        + (
+            f" vs baseline "
+            f"<b>{_html.escape(str(check.get('baseline')))}</b>"
+            if check.get("baseline")
+            else ""
+        )
+        + "</p>",
+    ]
+    kernels = check.get("kernels") or ()
+    if kernels:
+        parts.append(
+            "<table><tr><th>kernel</th><th>status</th><th>transfers</th>"
+            "<th>&Delta;</th><th>scratch</th><th>new patterns</th></tr>"
+        )
+        for kc in kernels:
+            status = str(kc.get("status", ""))
+            sclass = (
+                " class='verdict-regressed'" if status == "fail"
+                else (" class='verdict-improved'" if status == "pass" else "")
+            )
+            delta = kc.get("transactions_delta_pct")
+            delta_s = "new (was 0)" if delta is None else f"{delta:+.1f}%"
+            news = (
+                ", ".join(
+                    f"{_html.escape(str(p))} on {_html.escape(str(r))}"
+                    for r, p in kc.get("new_patterns", ())
+                )
+                or "&mdash;"
+            )
+            parts.append(
+                f"<tr><td>{_html.escape(str(kc.get('kernel')))}</td>"
+                f"<td{sclass}>{_html.escape(status)}</td>"
+                f"<td>{kc.get('transactions_before')} &rarr; "
+                f"{kc.get('transactions_after')}</td>"
+                f"<td>{delta_s}</td>"
+                f"<td>{kc.get('scratch_before')} &rarr; "
+                f"{kc.get('scratch_after')}</td><td>{news}</td></tr>"
+            )
+        parts.append("</table>")
+    flags = (check.get("anomalies") or {}).get("flags") or ()
+    for a in flags:
+        parts.append(
+            f"<p class='evidence verdict-regressed'>anomaly: "
+            f"{_html.escape(str(a.get('kernel')))} "
+            f"{_html.escape(str(a.get('metric')))} {a.get('value')} "
+            f"outside [{a.get('lo')}, {a.get('hi')}] "
+            f"(median {a.get('median')} over {a.get('n_history')} "
+            "iterations)</p>"
+        )
+    for f in check.get("failures") or ():
+        parts.append(f"<p class='evidence'>!! {_html.escape(str(f))}</p>")
+    parts.append("</div>")
+    return "".join(parts)
+
+
+def _check_section_markdown(check: Mapping) -> List[str]:
+    """Markdown lines of the check-verdict section."""
+    if not check:
+        return []
+    verdict = "passed" if check.get("passed") else "FAILED"
+    lines = [
+        "",
+        f"## regression check — {verdict}",
+        "",
+        f"candidate `{check.get('candidate', '')}`"
+        + (
+            f" vs baseline `{check.get('baseline')}`"
+            if check.get("baseline")
+            else ""
+        )
+        + f" [{check.get('mode', '')}]",
+        "",
+    ]
+    kernels = check.get("kernels") or ()
+    if kernels:
+        lines += [
+            "| kernel | status | transfers | Δ | scratch |",
+            "|---|---|---:|---:|---:|",
+        ]
+        for kc in kernels:
+            delta = kc.get("transactions_delta_pct")
+            delta_s = "new (was 0)" if delta is None else f"{delta:+.1f}%"
+            lines.append(
+                f"| {kc.get('kernel')} | {kc.get('status')} "
+                f"| {kc.get('transactions_before')} → "
+                f"{kc.get('transactions_after')} | {delta_s} "
+                f"| {kc.get('scratch_before')} → "
+                f"{kc.get('scratch_after')} |"
+            )
+    for f in check.get("failures") or ():
+        lines.append(f"- !! {f}")
+    return lines
+
+
 def render_session_html(
     entries: Sequence[ReportEntry],
     title: str = "cuthermo report",
     max_runs_per_region: int = 64,
     tuning: Optional[Sequence[Mapping]] = None,
+    check: Optional[Mapping] = None,
 ) -> str:
     """Self-contained HTML gallery for one profiled iteration.
 
@@ -429,8 +542,9 @@ def render_session_html(
     table plus the HBM-traffic placement chart.  ``tuning`` (trajectory
     dicts from ``TuneResult.as_dict()`` /
     ``tuner.trajectories_from_session``) adds a per-family tuning
-    trajectory section.  The output embeds no external resources — one
-    file opens anywhere.
+    trajectory section; ``check`` (a check-report document, see
+    ``_check_section_html``) adds the regression-gate verdict.  The
+    output embeds no external resources — one file opens anywhere.
     """
     parts: List[str] = [
         "<!doctype html><meta charset='utf-8'>",
@@ -464,6 +578,8 @@ def render_session_html(
             "bar sits on the achievable memory-roofline floor.</p>"
         )
         parts.append(chart)
+    if check:
+        parts.append(_check_section_html(check))
     if tuning:
         parts.append(_tuning_section_html(tuning))
     # per-kernel sections
@@ -561,6 +677,7 @@ def render_session_markdown(
     entries: Sequence[ReportEntry],
     title: str = "cuthermo report",
     tuning: Optional[Sequence[Mapping]] = None,
+    check: Optional[Mapping] = None,
 ) -> str:
     """Markdown digest of one iteration (the commit-message artifact)."""
     lines = [f"# {title}", ""]
@@ -610,6 +727,8 @@ def render_session_markdown(
                 f"save ~{100 * a.est_transaction_saving:.0f}% — "
                 f"{a.description}"
             )
+    if check:
+        lines += _check_section_markdown(check)
     if tuning:
         lines += _tuning_section_markdown(tuning)
     lines.append("")
@@ -621,6 +740,7 @@ def write_report_bundle(
     out_dir: str,
     title: str = "cuthermo report",
     tuning: Optional[Sequence[Mapping]] = None,
+    check: Optional[Mapping] = None,
 ) -> Dict[str, str]:
     """Write a whole-iteration report bundle into ``out_dir``.
 
@@ -628,17 +748,27 @@ def write_report_bundle(
     (markdown digest) and one ``<kernel>.csv`` per entry (the exact
     Fig. 5 CSV artifact).  ``tuning`` (trajectory dicts, see
     ``render_session_html``) adds the tuning-trajectory section to both
-    digests.  Returns a name->path mapping of everything written.
+    digests; ``check`` (a ``cuthermo check`` report document) adds the
+    regression-gate verdict.  Returns a name->path mapping of
+    everything written.
     """
     os.makedirs(out_dir, exist_ok=True)
     written: Dict[str, str] = {}
     index = os.path.join(out_dir, "index.html")
     with open(index, "w") as f:
-        f.write(render_session_html(entries, title=title, tuning=tuning))
+        f.write(
+            render_session_html(
+                entries, title=title, tuning=tuning, check=check
+            )
+        )
     written["index.html"] = index
     md = os.path.join(out_dir, "report.md")
     with open(md, "w") as f:
-        f.write(render_session_markdown(entries, title=title, tuning=tuning))
+        f.write(
+            render_session_markdown(
+                entries, title=title, tuning=tuning, check=check
+            )
+        )
     written["report.md"] = md
     seen: Dict[str, int] = {}
     for e in entries:

@@ -22,7 +22,7 @@ first-class, on-disk object:
 Layout on disk (see ``docs/file-format.md``)::
 
     sess/
-      session.json          # {"format": "cuthermo-session", "version": 1,
+      session.json          # {"format": "cuthermo-session", "version": 4,
                             #  "iterations": ["iter0", "iter1"]}
       iter0/
         manifest.json       # version stamp + per-kernel metadata
@@ -66,12 +66,21 @@ from .trace import GridSampler, RegionInfo, ShardInfo
 #:     ``repro.core.tuner`` and docs/file-format.md).  Backward
 #:     compatible on read: v1/v2 artifacts load with no tuning
 #:     provenance.
-ARTIFACT_VERSION = 3
+#: v4  (regression gating) adds the derived "scratch_words" metric to
+#:     each kernel entry so manifest-only consumers (session history
+#:     queries, ``cuthermo check`` anomaly bands) can track scratch
+#:     growth without loading the arrays.  Backward compatible on read:
+#:     v1-v3 entries load with the metric absent (``None`` in history
+#:     points; recomputed from the arrays by full loads).  The v1/v2/v3
+#:     load paths are pinned by the golden fixtures under
+#:     ``tests/fixtures/``.
+ARTIFACT_VERSION = 4
 
 #: Versions this build can load.  v1 lacks shard provenance, v2 lacks
-#: tuning provenance; both are otherwise identical and load with the
-#: missing fields empty.  Writers always stamp ARTIFACT_VERSION.
-SUPPORTED_VERSIONS = (1, 2, 3)
+#: tuning provenance, v3 lacks the scratch_words manifest metric; all
+#: are otherwise identical and load with the missing fields empty.
+#: Writers always stamp ARTIFACT_VERSION.
+SUPPORTED_VERSIONS = (1, 2, 3, 4)
 
 SESSION_FORMAT = "cuthermo-session"
 ITERATION_FORMAT = "cuthermo-iteration"
@@ -299,6 +308,11 @@ class ProfiledKernel:
         """Moved/demanded words of this kernel's heat map (1.0 = perfect)."""
         return self.heatmap.waste_ratio()
 
+    @property
+    def scratch_words(self) -> int:
+        """Word touches on this kernel's VMEM-scratch regions."""
+        return self.heatmap.scratch_words()
+
 
 @dataclasses.dataclass(frozen=True)
 class Iteration:
@@ -388,6 +402,80 @@ class SessionDiff:
 
 
 # ---------------------------------------------------------------------------
+# manifest-level history (the anomaly-band substrate)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class HistoryPoint:
+    """One kernel's manifest-level metrics in one session iteration.
+
+    Built from ``manifest.json`` alone — no numpy arrays are loaded —
+    so history queries over long-running sessions (hundreds of
+    iterations) stay cheap.  ``scratch_words`` is ``None`` for
+    artifacts written before format v4; consumers must skip the metric
+    rather than assume zero.  ``tuning_role`` / ``tuning_accepted``
+    carry the iteration's autotuner provenance so rolling-history
+    consumers (``cuthermo check --anomaly``) can exclude deliberately
+    bad candidates the tuner already rejected.
+    """
+
+    iteration: str
+    label: str
+    created: float
+    kernel: str
+    variant: str
+    transactions: int
+    waste_ratio: float
+    patterns: Tuple[Tuple[str, str], ...]  # (region, pattern), sorted
+    scratch_words: Optional[int] = None
+    tuning_role: Optional[str] = None  # 'baseline' | 'candidate' | None
+    tuning_accepted: Optional[bool] = None
+
+    @property
+    def n_patterns(self) -> int:
+        """Count of detected inefficiency patterns at this point."""
+        return len(self.patterns)
+
+
+def _history_points_from_manifest(
+    manifest: Mapping, iteration: str
+) -> List[HistoryPoint]:
+    """Extract one HistoryPoint per kernel entry of a loaded manifest."""
+    tuning = manifest.get("tuning") or {}
+    points: List[HistoryPoint] = []
+    for entry in manifest.get("kernels", []):
+        try:
+            patterns = tuple(
+                sorted(
+                    (str(p.get("region", "")), str(p.get("pattern", "")))
+                    for p in entry.get("patterns", [])
+                )
+            )
+            scratch = entry.get("scratch_words")
+            points.append(
+                HistoryPoint(
+                    iteration=iteration,
+                    label=str(manifest.get("label", iteration)),
+                    created=float(manifest.get("created", 0.0)),
+                    kernel=str(entry["name"]),
+                    variant=str(entry.get("variant", "")),
+                    transactions=int(entry.get("transactions", 0)),
+                    waste_ratio=float(entry.get("waste_ratio", 1.0)),
+                    patterns=patterns,
+                    scratch_words=None if scratch is None else int(scratch),
+                    tuning_role=tuning.get("role"),
+                    tuning_accepted=tuning.get("accepted"),
+                )
+            )
+        except (KeyError, TypeError, ValueError) as e:
+            raise SessionError(
+                f"{iteration}: malformed kernel entry in manifest ({e!r})"
+            ) from e
+    return points
+
+
+# ---------------------------------------------------------------------------
 # on-disk writers / readers
 # ---------------------------------------------------------------------------
 
@@ -453,6 +541,9 @@ def write_iteration(
                 "wall_s": pk.wall_s,
                 "transactions": pk.transactions,
                 "waste_ratio": pk.waste_ratio,
+                # v4: manifest-only consumers (history queries, anomaly
+                # bands) read this without touching the arrays
+                "scratch_words": pk.scratch_words,
                 "heatmap": meta,
                 "region_map": {old: new for old, new in pk.region_map},
                 # derived views, stored for numpy-free consumers; loaders
@@ -504,7 +595,17 @@ def load_iteration(path: Union[str, Path]) -> Iteration:
     _check_version(manifest, mpath)
     kernels: List[ProfiledKernel] = []
     for entry in manifest.get("kernels", []):
-        npz_path = path / entry["npz"]
+        # a syntactically-valid manifest can still be malformed (missing
+        # keys, wrong types); that is a LOAD error (SessionError -> CLI
+        # exit 2), never an uncaught traceback that a CI gate would
+        # mistake for a regression verdict (exit 1)
+        try:
+            npz_path = path / entry["npz"]
+        except (KeyError, TypeError) as e:
+            raise SessionError(
+                f"{mpath}: malformed kernel entry ({e!r}); every entry "
+                "needs at least 'name' and 'npz'"
+            ) from e
         if not npz_path.is_file():
             raise SessionError(f"{npz_path}: referenced by manifest, missing")
         try:
@@ -516,19 +617,24 @@ def load_iteration(path: Union[str, Path]) -> Iteration:
             raise SessionError(
                 f"{npz_path}: corrupt or inconsistent artifact ({e})"
             ) from e
-        kernels.append(
-            ProfiledKernel(
-                name=entry["name"],
-                variant=entry.get("variant", ""),
-                heatmap=hm,
-                reports=tuple(detect_all(hm)),
-                actions=tuple(advise(hm)),
-                wall_s=float(entry.get("wall_s", 0.0)),
-                region_map=tuple(
-                    sorted(entry.get("region_map", {}).items())
-                ),
+        try:
+            kernels.append(
+                ProfiledKernel(
+                    name=entry["name"],
+                    variant=entry.get("variant", ""),
+                    heatmap=hm,
+                    reports=tuple(detect_all(hm)),
+                    actions=tuple(advise(hm)),
+                    wall_s=float(entry.get("wall_s", 0.0)),
+                    region_map=tuple(
+                        sorted(entry.get("region_map", {}).items())
+                    ),
+                )
             )
-        )
+        except (KeyError, TypeError, ValueError, AttributeError) as e:
+            raise SessionError(
+                f"{mpath}: malformed kernel entry ({e!r})"
+            ) from e
     return Iteration(
         path=path,
         label=manifest.get("label", path.name),
@@ -903,6 +1009,45 @@ class ProfileSession:
             )
         return load_iteration(self.root / which)
 
+    # -- history queries ---------------------------------------------------
+    def history(
+        self, include_rejected: bool = True
+    ) -> Dict[str, List[HistoryPoint]]:
+        """Per-kernel metric history across every iteration, in order.
+
+        Reads only the iteration manifests (no numpy arrays), so this
+        stays cheap on long-running sessions.  Returns a mapping from
+        manifest kernel name to its :class:`HistoryPoint` sequence in
+        iteration order.  ``include_rejected=False`` drops iterations
+        the autotuner profiled and *rejected* — deliberately bad
+        candidates that would otherwise pollute a rolling anomaly band
+        (``cuthermo check --anomaly`` excludes them by default).
+        """
+        out: Dict[str, List[HistoryPoint]] = {}
+        for name in self.iteration_names():
+            mpath = self.root / name / "manifest.json"
+            try:
+                with open(mpath) as f:
+                    manifest = json.load(f)
+            except (OSError, json.JSONDecodeError) as e:
+                raise SessionError(
+                    f"{mpath}: unreadable manifest ({e})"
+                ) from e
+            _check_version(manifest, mpath)
+            for pt in _history_points_from_manifest(manifest, name):
+                if not include_rejected and pt.tuning_accepted is False:
+                    continue
+                out.setdefault(pt.kernel, []).append(pt)
+        return out
+
+    def kernel_history(
+        self, kernel: str, include_rejected: bool = True
+    ) -> List[HistoryPoint]:
+        """One kernel's :meth:`history` row (empty when never profiled)."""
+        return self.history(include_rejected=include_rejected).get(
+            kernel, []
+        )
+
     def diff(
         self,
         before: Union[int, str, Iteration],
@@ -920,6 +1065,7 @@ class ProfileSession:
 __all__ = [
     "ARTIFACT_VERSION",
     "SUPPORTED_VERSIONS",
+    "HistoryPoint",
     "Iteration",
     "KernelVerdict",
     "ProfileSession",

@@ -1,0 +1,146 @@
+"""Deterministic generator for the committed artifact-format fixtures.
+
+The golden artifacts under ``tests/fixtures/artifact-v{1,2,3}`` pin the
+v1/v2/v3 *load paths*: back-compat is guaranteed by files an old writer
+could have produced, not just by code that rewrites today's format.
+Each fixture is a tiny hand-built heat map (no kernel tracing, no jax)
+written with the current writer and then rewritten to the target
+version's manifest shape — exactly the keys that version's writer
+emitted:
+
+* v1 — no shard provenance, no tuning, no scratch_words metric
+* v2 — shard provenance, no tuning, no scratch_words
+* v3 — shard provenance + tuning provenance, no scratch_words
+
+Regenerate with ``python tests/fixtures/generate.py`` (from the repo
+root, with ``src`` on PYTHONPATH); ``test_artifact_compat.py`` also
+regenerates into a tmp dir and compares against the committed copies,
+so generator drift fails loudly.  Everything is pinned (created=0.0,
+wall_s=0.0, fixed temperatures), keeping regeneration deterministic.
+"""
+
+import json
+import sys
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.heatmap import Heatmap, RegionHeatmap
+from repro.core.session import ProfiledKernel, write_iteration
+from repro.core.tiles import TileGeometry
+from repro.core.trace import RegionInfo, ShardInfo
+
+FIXTURES = Path(__file__).parent
+
+#: The tuning provenance stored in the v3 fixture (shape from
+#: repro.core.tuner).
+V3_TUNING = {
+    "family": "golden",
+    "run": "fixture",
+    "step": 1,
+    "role": "candidate",
+    "candidate": {"label": "ladder:v01", "source": "ladder"},
+    "accepted": True,
+}
+
+#: Word temperatures of the fixture's HBM region: three sectors, eight
+#: sublane rows each.  Row 0 is uniformly warm, row 1 touches a single
+#: word, row 2 is cold except the tail — enough texture that pattern
+#: detection has something to chew on without being huge.
+_X_WORD_TEMPS = (
+    (2, 2, 2, 2, 2, 2, 2, 2),
+    (0, 0, 0, 3, 0, 0, 0, 0),
+    (0, 0, 0, 0, 0, 0, 1, 1),
+)
+_X_SECTOR_TEMPS = (2, 3, 1)
+
+_ACC_WORD_TEMPS = ((4, 4, 4, 4, 4, 4, 4, 4),)
+_ACC_SECTOR_TEMPS = (4,)
+
+
+def _region(name, space, word_temps, sector_temps):
+    word_temps = np.asarray(word_temps, dtype=np.int64)
+    return RegionHeatmap(
+        RegionInfo(
+            name=name,
+            geometry=TileGeometry((16, 128), itemsize=4, name=name),
+            space=space,
+        ),
+        n_programs=4,
+        tags=np.arange(word_temps.shape[0], dtype=np.int64) * 8,
+        word_temps=word_temps,
+        sector_temps=np.asarray(sector_temps, dtype=np.int64),
+    )
+
+
+def _heatmap(with_shards):
+    shards = (
+        (
+            ShardInfo(shard=0, lo=0, hi=2, programs=2, records=8,
+                      dropped=0, wall_s=0.0),
+            ShardInfo(shard=1, lo=2, hi=4, programs=2, records=8,
+                      dropped=0, wall_s=0.0),
+        )
+        if with_shards
+        else ()
+    )
+    return Heatmap(
+        kernel="golden_kernel",
+        grid=(4,),
+        sampler="full",
+        regions=(
+            _region("x", "hbm", _X_WORD_TEMPS, _X_SECTOR_TEMPS),
+            _region("acc", "vmem_scratch", _ACC_WORD_TEMPS,
+                    _ACC_SECTOR_TEMPS),
+        ),
+        n_records=16,
+        dropped=0,
+        shards=shards,
+    )
+
+
+def _rewrite_manifest(path, version, keep_tuning):
+    """Strip the freshly written manifest down to ``version``'s shape."""
+    mpath = path / "manifest.json"
+    manifest = json.loads(mpath.read_text())
+    manifest["version"] = version
+    manifest["created"] = 0.0  # determinism: fixtures carry no wallclock
+    if not keep_tuning:
+        manifest.pop("tuning", None)
+    for entry in manifest["kernels"]:
+        entry.pop("scratch_words", None)  # v4-only metric
+        if version < 2:
+            entry["heatmap"].pop("shards", None)
+    mpath.write_text(json.dumps(manifest, indent=2) + "\n")
+
+
+def write_fixtures(dest):
+    """Write artifact-v1/-v2/-v3 under ``dest``; returns the three paths."""
+    dest = Path(dest)
+    out = []
+    for version in (1, 2, 3):
+        pk = ProfiledKernel(
+            name="golden",
+            variant="v00",
+            heatmap=_heatmap(with_shards=version >= 2),
+            reports=(),  # loaders recompute derived views from arrays
+            actions=(),
+            wall_s=0.0,
+            region_map=(("x", "xT"),),
+        )
+        path = dest / f"artifact-v{version}"
+        write_iteration(
+            path,
+            [pk],
+            label=f"golden-v{version}",
+            note="format-compat fixture",
+            tuning=V3_TUNING if version >= 3 else None,
+        )
+        _rewrite_manifest(path, version, keep_tuning=version >= 3)
+        out.append(path)
+    return out
+
+
+if __name__ == "__main__":
+    for p in write_fixtures(FIXTURES):
+        print(f"wrote {p}", file=sys.stderr)

@@ -1,0 +1,142 @@
+"""Artifact back-compat pinned by committed v1/v2/v3 golden fixtures.
+
+The fixtures under ``tests/fixtures/artifact-v*`` are files an OLD
+writer could have produced (see ``tests/fixtures/generate.py``).  These
+tests pin the load paths against them, so a change that breaks reading
+historical artifacts fails here even if every code-rewrite round-trip
+test still passes.
+"""
+
+import importlib.util
+import json
+import shutil
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core.session import (
+    ARTIFACT_VERSION,
+    SUPPORTED_VERSIONS,
+    SessionError,
+    heatmaps_equal,
+    load_iteration,
+)
+
+FIXTURES = Path(__file__).parent / "fixtures"
+
+
+def _load_generator():
+    spec = importlib.util.spec_from_file_location(
+        "fixture_generator", FIXTURES / "generate.py"
+    )
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_every_supported_version_has_a_fixture():
+    # the current version is exercised by the live writer; every OLD
+    # version must be pinned by a committed artifact
+    assert SUPPORTED_VERSIONS == (1, 2, 3, 4)
+    assert ARTIFACT_VERSION == 4
+    for version in SUPPORTED_VERSIONS[:-1]:
+        assert (FIXTURES / f"artifact-v{version}" / "manifest.json").is_file()
+
+
+@pytest.mark.parametrize("version", [1, 2, 3])
+def test_fixture_loads_with_pinned_contents(version):
+    it = load_iteration(FIXTURES / f"artifact-v{version}")
+    assert it.label == f"golden-v{version}"
+    (pk,) = it.kernels
+    assert pk.name == "golden" and pk.variant == "v00"
+    # golden temperatures: the exact arrays the fixture was built from
+    x = pk.heatmap.region("x")
+    assert np.array_equal(x.tags_array, np.array([0, 8, 16]))
+    assert np.array_equal(x.sector_temps_array, np.array([2, 3, 1]))
+    assert np.array_equal(
+        x.word_temps_matrix[0], np.array([2, 2, 2, 2, 2, 2, 2, 2])
+    )
+    acc = pk.heatmap.region("acc")
+    assert acc.region.space == "vmem_scratch"
+    # derived metrics recompute from the arrays on every version,
+    # including the v4-era scratch metric the old manifests never stored
+    assert pk.transactions == 6
+    assert pk.scratch_words == 32
+    # the persisted region-rename survives (diff alignment input)
+    assert pk.region_map == (("x", "xT"),)
+
+
+def test_v1_fixture_has_no_provenance():
+    it = load_iteration(FIXTURES / "artifact-v1")
+    assert it.tuning is None
+    assert it.kernels[0].shards == ()
+
+
+def test_v2_fixture_carries_shards_but_no_tuning():
+    it = load_iteration(FIXTURES / "artifact-v2")
+    assert it.tuning is None
+    shards = it.kernels[0].shards
+    assert [s.shard for s in shards] == [0, 1]
+    assert [(s.lo, s.hi) for s in shards] == [(0, 2), (2, 4)]
+    assert sum(s.records for s in shards) == 16
+
+
+def test_v3_fixture_carries_tuning_provenance():
+    it = load_iteration(FIXTURES / "artifact-v3")
+    assert it.tuning is not None
+    assert it.tuning["role"] == "candidate"
+    assert it.tuning["accepted"] is True
+    assert it.tuning["candidate"]["label"] == "ladder:v01"
+
+
+def test_old_manifests_yield_history_points_without_scratch():
+    # manifest-only history consumers must see scratch_words=None on
+    # pre-v4 artifacts (skip the metric), never a fabricated zero
+    from repro.core.session import _history_points_from_manifest
+
+    for version in (1, 2, 3):
+        manifest = json.loads(
+            (FIXTURES / f"artifact-v{version}" / "manifest.json").read_text()
+        )
+        (pt,) = _history_points_from_manifest(manifest, f"artifact-v{version}")
+        assert pt.kernel == "golden"
+        assert pt.transactions == 6
+        assert pt.scratch_words is None
+    # v3 tuning provenance flows into the point
+    assert pt.tuning_role == "candidate" and pt.tuning_accepted is True
+
+
+def test_unknown_version_still_fails(tmp_path):
+    target = tmp_path / "artifact"
+    shutil.copytree(FIXTURES / "artifact-v1", target)
+    mpath = target / "manifest.json"
+    manifest = json.loads(mpath.read_text())
+    manifest["version"] = 99
+    mpath.write_text(json.dumps(manifest))
+    with pytest.raises(SessionError):
+        load_iteration(target)
+
+
+def test_fixtures_match_generator(tmp_path):
+    """The committed fixtures are exactly what the generator writes.
+
+    Guards both directions: editing the generator without regenerating,
+    and hand-editing a fixture without updating the generator.
+    """
+    gen = _load_generator()
+    gen.write_fixtures(tmp_path)
+    for version in (1, 2, 3):
+        fresh = load_iteration(tmp_path / f"artifact-v{version}")
+        committed = load_iteration(FIXTURES / f"artifact-v{version}")
+        assert heatmaps_equal(fresh.kernels[0].heatmap,
+                              committed.kernels[0].heatmap)
+        assert fresh.label == committed.label
+        assert fresh.tuning == committed.tuning
+        assert fresh.kernels[0].shards == committed.kernels[0].shards
+        # manifests agree byte-for-byte (created is pinned to 0.0)
+        fresh_m = (tmp_path / f"artifact-v{version}" /
+                   "manifest.json").read_text()
+        committed_m = (FIXTURES / f"artifact-v{version}" /
+                       "manifest.json").read_text()
+        assert fresh_m == committed_m

@@ -1,0 +1,502 @@
+"""Regression gate: thresholds, verdicts, anomaly bands, exit codes."""
+
+import json
+import os
+
+import pytest
+
+from repro import cli
+from repro.core.advisor import advise
+from repro.core.check import (
+    CHECK_SCHEMA_VERSION,
+    Anomaly,
+    CheckError,
+    CheckThresholds,
+    check_iterations,
+    check_session_anomalies,
+    detect_anomalies,
+    merge_reports,
+    pct_delta,
+    robust_band,
+)
+from repro.core.collector import analyze
+from repro.core.patterns import detect_all
+from repro.core.session import (
+    HistoryPoint,
+    ProfiledKernel,
+    ProfileSession,
+    load_iteration,
+    write_iteration,
+)
+from repro.core.trace import GridSampler
+from repro.kernels.gemm import gemm_v00_spec, gemm_v01_spec
+
+FULL = GridSampler(None)
+
+
+def _profiled(name="gemm", variant="v00", spec_fn=gemm_v00_spec, n=128,
+              with_reports=True):
+    hm = analyze(spec_fn(n, n, n), sampler=FULL)
+    return ProfiledKernel(
+        name=name,
+        variant=variant,
+        heatmap=hm,
+        reports=tuple(detect_all(hm)) if with_reports else (),
+        actions=tuple(advise(hm)),
+    )
+
+
+@pytest.fixture(scope="module")
+def naive():
+    return _profiled("gemm", "v00", gemm_v00_spec)
+
+
+@pytest.fixture(scope="module")
+def tiled():
+    return _profiled("gemm", "v01", gemm_v01_spec)
+
+
+def _iteration(tmp_path, name, kernels, **kw):
+    return load_iteration(
+        write_iteration(tmp_path / name, kernels, label=name, **kw)
+    )
+
+
+# -- thresholds parsing -----------------------------------------------------
+
+
+def test_thresholds_defaults_are_strict():
+    t = CheckThresholds()
+    assert t.max_transfer_pct == 0.0
+    assert t.max_aggregate_pct == 0.0
+    assert t.max_scratch_pct == 0.0
+    assert t.fail_on_new_patterns and t.fail_on_missing
+    assert t.allowed_patterns == ()
+
+
+def test_thresholds_from_specs():
+    t = CheckThresholds.from_specs(
+        ["transfer-pct=5", "aggregate-pct=2.5", "scratch-pct=inf",
+         "severity=0.1", "new-patterns=off", "missing=off",
+         "allow-pattern=hot", "allow-pattern=strided",
+         "allow-pattern=hot"]
+    )
+    assert t.max_transfer_pct == 5.0
+    assert t.max_aggregate_pct == 2.5
+    assert t.max_scratch_pct == float("inf")
+    assert t.max_severity_increase == 0.1
+    assert not t.fail_on_new_patterns and not t.fail_on_missing
+    assert t.allowed_patterns == ("hot", "strided")  # deduped, ordered
+    json.dumps(t.as_dict())  # JSON-ready
+
+
+@pytest.mark.parametrize("spec", [
+    "bogus=1",                # unknown key
+    "transfer-pct",           # no '='
+    "transfer-pct=abc",       # not a number
+    "new-patterns=maybe",     # not on|off
+    "allow-pattern=nope",     # unknown pattern class
+])
+def test_thresholds_bad_specs_raise(spec):
+    with pytest.raises(CheckError):
+        CheckThresholds.from_specs([spec])
+
+
+def test_pct_delta_edges():
+    assert pct_delta(100, 150) == 50.0
+    assert pct_delta(100, 50) == -50.0
+    assert pct_delta(0, 0) == 0.0
+    assert pct_delta(0, 5) is None  # unbounded growth from zero
+
+
+# -- baseline gate ----------------------------------------------------------
+
+
+def test_check_identical_iterations_pass(tmp_path, tiled):
+    base = _iteration(tmp_path, "base", [tiled])
+    good = _iteration(tmp_path, "good", [tiled])
+    report = check_iterations(base, good)
+    assert report.passed and report.failures == ()
+    (kc,) = report.kernels
+    assert kc.status == "pass" and kc.verdict == "unchanged"
+    assert report.aggregate.failures == ()
+    assert "check passed" in report.summary()
+
+
+def test_check_regression_fails_on_transfers_and_patterns(
+    tmp_path, naive, tiled
+):
+    base = _iteration(tmp_path, "base", [tiled])
+    bad = _iteration(tmp_path, "bad", [naive])
+    report = check_iterations(base, bad)
+    assert not report.passed
+    (kc,) = report.kernels
+    assert kc.status == "fail" and kc.verdict == "regressed"
+    assert kc.transactions_after > kc.transactions_before
+    assert any("false-sharing" in f for f in kc.failures)
+    assert any("transfers" in f for f in kc.failures)
+    # the aggregate budget is blown too
+    assert report.aggregate.failures
+    assert "FAILED" in report.summary()
+
+
+def test_check_improvement_passes(tmp_path, naive, tiled):
+    # less traffic + fixed patterns: strict gate, still green
+    base = _iteration(tmp_path, "base", [naive])
+    cand = _iteration(tmp_path, "cand", [tiled])
+    report = check_iterations(base, cand)
+    assert report.passed
+    (kc,) = report.kernels
+    assert kc.verdict == "improved"
+    assert kc.fixed_patterns  # the false-sharing fix is recorded
+
+
+def test_check_lenient_thresholds_absorb_regression(tmp_path, naive, tiled):
+    base = _iteration(tmp_path, "base", [tiled])
+    bad = _iteration(tmp_path, "bad", [naive])
+    t = CheckThresholds.from_specs(
+        ["transfer-pct=900", "aggregate-pct=900", "new-patterns=off"]
+    )
+    assert check_iterations(base, bad, thresholds=t).passed
+    # allow-pattern exempts the class instead of switching the rule off
+    t2 = CheckThresholds.from_specs(
+        ["transfer-pct=900", "aggregate-pct=900",
+         "allow-pattern=false-sharing"]
+    )
+    report = check_iterations(base, bad, thresholds=t2)
+    assert report.passed and report.kernels[0].new_patterns == ()
+
+
+def test_check_missing_and_added_kernels(tmp_path, naive, tiled):
+    both = _profiled("other", "v01", gemm_v01_spec)
+    base = _iteration(tmp_path, "base", [tiled, both])
+    cand = _iteration(
+        tmp_path, "cand",
+        [tiled, _profiled("third", "v01", gemm_v01_spec)],
+    )
+    report = check_iterations(base, cand)
+    by_name = {kc.kernel: kc for kc in report.kernels}
+    assert by_name["other"].status == "missing"
+    assert by_name["other"].failures  # strict default: missing fails
+    assert by_name["third"].status == "added"
+    assert by_name["third"].failures == ()  # informational only
+    assert not report.passed
+    lenient = CheckThresholds.from_specs(["missing=off"])
+    assert check_iterations(base, cand, thresholds=lenient).passed
+
+
+def test_check_disjoint_iterations_raise(tmp_path, tiled):
+    base = _iteration(tmp_path, "base", [tiled])
+    cand = _iteration(
+        tmp_path, "cand", [_profiled("unrelated", "v01", gemm_v01_spec)]
+    )
+    with pytest.raises(CheckError):
+        check_iterations(base, cand)
+
+
+def test_check_scratch_gate(tmp_path):
+    from pathlib import Path
+
+    from repro import kernels as kreg
+    from repro.core.session import Iteration
+
+    def ttm(ref, name="ttm"):
+        spec, ctx = kreg.build(ref)
+        entry, variant = kreg.resolve(ref)
+        hm = analyze(spec, sampler=entry.sampler(), dynamic_context=ctx)
+        # reports stripped: isolate the scratch gate from pattern rules
+        # (in-memory Iterations, since the disk loader recomputes them)
+        return ProfiledKernel(name=name, variant=variant.name, heatmap=hm,
+                              reports=(), actions=())
+
+    base = Iteration(path=Path("base"), label="base", created=0.0,
+                     kernels=(ttm("ttm:fused"),))
+    cand = Iteration(path=Path("cand"), label="cand", created=0.0,
+                     kernels=(ttm("ttm:scratch"),))
+    report = check_iterations(base, cand)
+    (kc,) = report.kernels
+    assert kc.scratch_before == 0 and kc.scratch_after > 0
+    assert kc.scratch_delta_pct is None  # growth from zero
+    assert any("scratch words" in f for f in kc.failures)
+    # the pattern rule independently flags the new scratch-abuse too
+    assert ("Y_shr", "scratch-abuse") in kc.new_patterns
+    # growth from zero blows any finite budget...
+    # (new-patterns=off isolates the scratch gate from the pattern rule)
+    t = CheckThresholds.from_specs(
+        ["scratch-pct=1000000", "new-patterns=off"]
+    )
+    assert not check_iterations(base, cand, thresholds=t).passed
+    # ...and only the explicit inf escape hatch disables the gate
+    t = CheckThresholds.from_specs(["scratch-pct=inf", "new-patterns=off"])
+    assert check_iterations(base, cand, thresholds=t).passed
+
+
+def test_check_region_rename_alignment(tmp_path):
+    from repro.kernels.gramschm import k3_naive_spec, k3_opt_spec
+
+    def gs(spec_fn, variant):
+        hm = analyze(spec_fn(512, 512, 512, k=3), sampler=FULL)
+        return ProfiledKernel(name="gramschm", variant=variant, heatmap=hm,
+                              reports=tuple(detect_all(hm)), actions=())
+
+    base = _iteration(tmp_path, "base", [gs(k3_naive_spec, "naive")])
+    cand = _iteration(tmp_path, "cand", [gs(k3_opt_spec, "opt")])
+    report = check_iterations(
+        base, cand, region_maps={"gramschm": {"q": "qT"}}
+    )
+    # with the rename aligned, q's strided fix is credited, and the one
+    # honest trade-off (the transposed q runs hot) is surfaced by name
+    (kc,) = report.kernels
+    assert kc.verdict == "improved"
+    assert ("q", "strided") in kc.fixed_patterns
+    assert kc.new_patterns == (("q", "hot"),)
+    assert report.failures == ("gramschm: new pattern: hot on q",)
+    # exempting the traded-in class turns the improvement green
+    t = CheckThresholds.from_specs(["allow-pattern=hot"])
+    assert check_iterations(
+        base, cand, thresholds=t, region_maps={"gramschm": {"q": "qT"}}
+    ).passed
+    # self-check under the rename map: the rename must be a no-op
+    assert check_iterations(
+        base, base, region_maps={"gramschm": {"q": "qT"}}
+    ).passed
+
+
+# -- report document --------------------------------------------------------
+
+
+def test_report_json_schema(tmp_path, naive, tiled):
+    base = _iteration(tmp_path, "base", [tiled])
+    bad = _iteration(tmp_path, "bad", [naive])
+    doc = check_iterations(base, bad).as_dict()
+    json.dumps(doc)  # serializable end to end
+    assert doc["format"] == "cuthermo-check"
+    assert doc["schema_version"] == CHECK_SCHEMA_VERSION == 1
+    assert doc["passed"] is False and doc["mode"] == "baseline"
+    for key in ("candidate", "baseline", "thresholds", "kernels",
+                "aggregate", "anomalies", "failures"):
+        assert key in doc
+    (kc,) = doc["kernels"]
+    for key in ("kernel", "status", "verdict", "failures",
+                "transactions_before", "transactions_after",
+                "transactions_delta_pct", "scratch_before",
+                "scratch_after", "new_patterns", "worsened_patterns"):
+        assert key in kc
+    assert doc["failures"]  # flat list mirrors the per-kernel ones
+
+
+# -- anomaly bands ----------------------------------------------------------
+
+
+def _pt(i, tx, patterns=(), scratch=0, accepted=None):
+    return HistoryPoint(
+        iteration=f"iter{i}", label=f"iter{i}", created=float(i),
+        kernel="k", variant="v", transactions=tx, waste_ratio=1.0,
+        patterns=tuple(patterns), scratch_words=scratch,
+        tuning_accepted=accepted,
+    )
+
+
+def test_robust_band_is_deterministic_and_floored():
+    values = [100.0, 101.0, 99.0, 100.0]
+    assert robust_band(values) == robust_band(values)
+    med, mad, lo, hi = robust_band(values, nmads=4.0, rel_floor=0.02)
+    assert med == 100.0
+    # MAD term vs relative floor: the band is never tighter than 2%
+    assert hi - med >= 0.02 * med
+    # zero-spread history still admits the floor's wiggle
+    _, _, lo0, hi0 = robust_band([50.0, 50.0, 50.0])
+    assert lo0 < 50.0 < hi0
+
+
+def test_detect_anomalies_flags_spike_not_wiggle():
+    stable = [_pt(i, 1000) for i in range(4)]
+    flags, meta = detect_anomalies({"k": stable + [_pt(4, 5000)]})
+    assert [a.metric for a in flags] == ["transactions"]
+    a = flags[0]
+    assert a.kernel == "k" and a.value == 5000.0 and a.iteration == "iter4"
+    assert meta["kernels_scanned"] == 1
+    # a within-floor wiggle does not flag
+    flags2, _ = detect_anomalies({"k": stable + [_pt(4, 1010)]})
+    assert flags2 == ()
+
+
+def test_detect_anomalies_pattern_count_and_scratch():
+    stable = [_pt(i, 1000, patterns=(("r", "hot"),)) for i in range(3)]
+    latest = _pt(3, 1000, patterns=(("r", "hot"), ("r", "strided"),
+                                    ("s", "hot")))
+    flags, _ = detect_anomalies({"k": stable + [latest]})
+    assert {a.metric for a in flags} == {"patterns"}
+    # scratch growth flags on its own metric
+    hist = [_pt(i, 1000, scratch=100) for i in range(3)]
+    flags2, _ = detect_anomalies({"k": hist + [_pt(3, 1000, scratch=900)]})
+    assert {a.metric for a in flags2} == {"scratch_words"}
+
+
+def test_detect_anomalies_skips_short_and_unversioned_history():
+    # fewer than min_history prior points: kernel skipped entirely
+    flags, meta = detect_anomalies({"k": [_pt(0, 10), _pt(1, 9000)]})
+    assert flags == () and meta["kernels_skipped"] == 1
+    # pre-v4 artifacts (scratch None) skip the scratch metric only
+    hist = [_pt(i, 1000, scratch=None) for i in range(3)]
+    flags2, _ = detect_anomalies({"k": hist + [_pt(3, 1000, scratch=10**6)]})
+    assert flags2 == ()
+
+
+def test_anomaly_over_session_is_deterministic(tmp_path, naive, tiled):
+    sess = ProfileSession(tmp_path / "sess")
+    for _ in range(4):
+        sess.add_iteration([tiled])
+    sess.add_iteration([naive])
+    r1 = check_session_anomalies(sess)
+    r2 = check_session_anomalies(sess)
+    assert r1.as_dict() == r2.as_dict()  # acceptance: deterministic
+    assert not r1.passed
+    assert {a.metric for a in r1.anomalies} == {"transactions", "patterns"}
+    assert r1.mode == "anomaly"
+    json.dumps(r1.as_dict())
+
+
+def test_anomaly_excludes_tuner_rejected_iterations(tmp_path, naive, tiled):
+    sess = ProfileSession(tmp_path / "sess")
+    for _ in range(4):
+        sess.add_iteration([tiled])
+    # a candidate the tuner already rejected must not pollute the band
+    sess.add_iteration(
+        [naive],
+        tuning={"family": "gemm", "step": 1, "role": "candidate",
+                "accepted": False},
+    )
+    sess.add_iteration([tiled])
+    assert check_session_anomalies(sess).passed
+    # ...unless explicitly included (now the band sees the spike)
+    history = sess.history(include_rejected=True)
+    assert len(history["gemm"]) == 6
+    assert len(sess.history(include_rejected=False)["gemm"]) == 5
+
+
+def test_merge_reports_combines_modes(tmp_path, naive, tiled):
+    from repro.core.check import CheckReport
+
+    base = _iteration(tmp_path, "base", [tiled])
+    good = _iteration(tmp_path, "good", [tiled])
+    baseline_report = check_iterations(base, good)
+    anomaly = Anomaly(kernel="gemm", metric="transactions", value=9.0,
+                      median=1.0, mad=0.0, lo=0.9, hi=1.1, n_history=3)
+    anomaly_report = CheckReport(mode="anomaly", candidate="s",
+                                 anomalies=(anomaly,),
+                                 anomaly_meta={"nmads": 4.0})
+    merged = merge_reports(baseline_report, anomaly_report)
+    assert merged.mode == "baseline+anomaly"
+    assert not merged.passed  # the anomaly flag fails the merged gate
+    assert merged.kernels == baseline_report.kernels
+
+
+# -- CLI exit-code contract -------------------------------------------------
+
+
+@pytest.fixture()
+def gate_dirs(tmp_path, naive, tiled):
+    write_iteration(tmp_path / "base", [tiled], label="base")
+    write_iteration(tmp_path / "good", [tiled], label="good")
+    write_iteration(tmp_path / "bad", [naive], label="bad")
+    return tmp_path
+
+
+def test_cli_check_pass_is_exit_0(gate_dirs, capsys):
+    rc = cli.main(["check", str(gate_dirs / "good"),
+                   "--baseline", str(gate_dirs / "base")])
+    assert rc == 0
+    assert "check passed" in capsys.readouterr().out
+
+
+def test_cli_check_gate_failure_is_exit_1(gate_dirs, capsys):
+    rc = cli.main(["check", str(gate_dirs / "bad"),
+                   "--baseline", str(gate_dirs / "base")])
+    assert rc == 1
+    assert "FAILED" in capsys.readouterr().out
+
+
+def test_cli_check_usage_and_load_errors_are_exit_2(gate_dirs, capsys):
+    # nothing to gate against
+    assert cli.main(["check", str(gate_dirs / "good")]) == 2
+    # missing artifact
+    assert cli.main(["check", str(gate_dirs / "nope"),
+                     "--baseline", str(gate_dirs / "base")]) == 2
+    # bad threshold spec
+    assert cli.main(["check", str(gate_dirs / "good"),
+                     "--baseline", str(gate_dirs / "base"),
+                     "--threshold", "bogus=1"]) == 2
+    # bad region map spec
+    assert cli.main(["check", str(gate_dirs / "good"),
+                     "--baseline", str(gate_dirs / "base"),
+                     "--region-map", "nocolon"]) == 2
+    # --anomaly on a non-session directory
+    assert cli.main(["check", str(gate_dirs / "good"),
+                     "--anomaly"]) == 2
+    capsys.readouterr()
+
+
+def test_cli_check_writes_json_and_sidecar(gate_dirs, capsys):
+    out = gate_dirs / "check-report.json"
+    rc = cli.main(["check", str(gate_dirs / "bad"),
+                   "--baseline", str(gate_dirs / "base"),
+                   "--json", str(out), "--quiet"])
+    assert rc == 1
+    capsys.readouterr()
+    doc = json.loads(out.read_text())
+    assert doc["schema_version"] == CHECK_SCHEMA_VERSION
+    assert doc["passed"] is False
+    # the sidecar lands next to the candidate artifact
+    sidecar = json.loads((gate_dirs / "bad" / "check.json").read_text())
+    assert sidecar == doc
+
+
+def test_cli_check_json_stdout(gate_dirs, capsys):
+    rc = cli.main(["check", str(gate_dirs / "good"),
+                   "--baseline", str(gate_dirs / "base"), "--json", "-"])
+    assert rc == 0
+    captured = capsys.readouterr()
+    doc = json.loads(captured.out)  # stdout is pure JSON
+    assert doc["passed"] is True
+    assert "check passed" in captured.err  # summary moved to stderr
+
+
+def test_cli_check_anomaly_session_flow(tmp_path, naive, tiled, capsys):
+    sess = ProfileSession(tmp_path / "sess")
+    for _ in range(4):
+        sess.add_iteration([tiled])
+    sess.add_iteration([naive])
+    rc = cli.main(["check", str(tmp_path / "sess"), "--anomaly"])
+    assert rc == 1
+    assert "anomal" in capsys.readouterr().out
+    # combined mode: baseline gate + anomaly scan in one report
+    write_iteration(tmp_path / "base", [tiled], label="base")
+    rc = cli.main(["check", str(tmp_path / "sess"),
+                   "--baseline", str(tmp_path / "base"),
+                   "--anomaly", "--json", str(tmp_path / "c.json"),
+                   "--quiet"])
+    assert rc == 1
+    capsys.readouterr()
+    doc = json.loads((tmp_path / "c.json").read_text())
+    assert doc["mode"] == "baseline+anomaly"
+    assert doc["anomalies"]["flags"]
+    # loosening the band silences the anomaly gate
+    rc = cli.main(["check", str(tmp_path / "sess"), "--anomaly",
+                   "--nmads", "4", "--min-history", "6", "--quiet"])
+    assert rc == 0
+    capsys.readouterr()
+
+
+def test_cli_report_renders_check_verdict(gate_dirs, capsys, tmp_path):
+    assert cli.main(["check", str(gate_dirs / "bad"),
+                     "--baseline", str(gate_dirs / "base"),
+                     "--quiet"]) == 1
+    out = tmp_path / "bundle"
+    assert cli.main(["report", str(gate_dirs / "bad"),
+                     "--out", str(out)]) == 0
+    capsys.readouterr()
+    html = (out / "index.html").read_text()
+    assert "regression check" in html and "FAILED" in html
+    md = (out / "report.md").read_text()
+    assert "regression check" in md

@@ -34,12 +34,12 @@ def test_help_subprocess():
     proc = _run_cli("--help")
     assert proc.returncode == 0
     out = proc.stdout
-    for sub in ("profile", "report", "diff", "kernels", "tune"):
+    for sub in ("profile", "report", "diff", "check", "kernels", "tune"):
         assert sub in out
 
 
-@pytest.mark.parametrize("sub", ["profile", "report", "diff", "kernels",
-                                 "tune"])
+@pytest.mark.parametrize("sub", ["profile", "report", "diff", "check",
+                                 "kernels", "tune"])
 def test_subcommand_help_subprocess(sub):
     proc = _run_cli(sub, "--help")
     assert proc.returncode == 0
@@ -49,6 +49,75 @@ def test_subcommand_help_subprocess(sub):
 def test_no_command_prints_help():
     proc = _run_cli()
     assert proc.returncode == 2
+
+
+# -- subprocess: the 0/1/2 exit-code contract of the CI gates ---------------
+
+
+@pytest.fixture(scope="module")
+def gate_session(tmp_path_factory):
+    """Two profiled iterations: iter0 the tiled gemm, iter1 the naive."""
+    sess = str(tmp_path_factory.mktemp("gate") / "sess")
+    assert cli.main(["profile", "--kernel", "gemm:v01", "--out", sess,
+                     "--quiet"]) == 0
+    assert cli.main(["profile", "--kernel", "gemm:v00", "--out", sess,
+                     "--quiet"]) == 0
+    return sess
+
+
+def test_diff_exit_code_contract_subprocess(gate_session, tmp_path):
+    good, bad = (os.path.join(gate_session, "iter0"),
+                 os.path.join(gate_session, "iter1"))
+    # 0: no regression (self-diff)
+    assert _run_cli("diff", good, good,
+                    "--fail-on-regression").returncode == 0
+    # 1: a real regression under --fail-on-regression
+    assert _run_cli("diff", good, bad,
+                    "--fail-on-regression").returncode == 1
+    # 2: missing artifact — a LOAD error, not a gate verdict
+    proc = _run_cli("diff", good, os.path.join(gate_session, "nope"),
+                    "--fail-on-regression")
+    assert proc.returncode == 2
+    assert "manifest" in proc.stderr
+    # 2: malformed manifest (entry missing its npz key) — previously an
+    # uncaught KeyError, which Python exits 1 on, indistinguishable
+    # from a regression verdict
+    broken = tmp_path / "broken"
+    broken.mkdir()
+    (broken / "manifest.json").write_text(
+        '{"format": "cuthermo-iteration", "version": 4, '
+        '"label": "broken", "created": 0.0, '
+        '"kernels": [{"name": "gemm"}]}'
+    )
+    proc = _run_cli("diff", good, str(broken), "--fail-on-regression")
+    assert proc.returncode == 2
+    assert "Traceback" not in proc.stderr
+    # 2: bad --region-map spec (usage error)
+    assert _run_cli("diff", good, good,
+                    "--region-map", "nocolon").returncode == 2
+
+
+def test_check_exit_code_contract_subprocess(gate_session, tmp_path):
+    import json
+
+    good, bad = (os.path.join(gate_session, "iter0"),
+                 os.path.join(gate_session, "iter1"))
+    # 0: candidate matches baseline
+    assert _run_cli("check", good, "--baseline", good).returncode == 0
+    # 1: gate failure, with the machine-readable report on stdout
+    proc = _run_cli("check", bad, "--baseline", good, "--json", "-",
+                    "--quiet")
+    assert proc.returncode == 1
+    doc = json.loads(proc.stdout)
+    assert doc["format"] == "cuthermo-check"
+    assert doc["schema_version"] == 1
+    assert doc["passed"] is False
+    # 2: usage and load errors never masquerade as gate failures
+    assert _run_cli("check", good).returncode == 2
+    assert _run_cli("check", str(tmp_path / "nope"),
+                    "--baseline", good).returncode == 2
+    assert _run_cli("check", good, "--baseline", good,
+                    "--threshold", "bogus=1").returncode == 2
 
 
 # -- in-process: profile -> diff -> report ----------------------------------

@@ -210,18 +210,20 @@ def test_workers2_session_end_to_end_with_shard_provenance(tmp_path):
 
 
 def test_v1_artifact_still_loads(tmp_path):
-    """The v3 loader reads v1 artifacts (no shard or tuning provenance)."""
+    """The v4 loader reads v1 artifacts (no shard or tuning provenance)."""
     from repro.core.session import SUPPORTED_VERSIONS
 
-    assert 1 in SUPPORTED_VERSIONS and ARTIFACT_VERSION == 3
+    assert 1 in SUPPORTED_VERSIONS and ARTIFACT_VERSION == 4
     path = write_iteration(tmp_path / "iter0", [_profiled()])
     mpath = path / "manifest.json"
     manifest = json.loads(mpath.read_text())
-    # rewrite as a faithful v1 artifact: old stamp, no shards/tuning keys
+    # rewrite as a faithful v1 artifact: old stamp, no shards/tuning
+    # keys, no v4 scratch_words metric
     manifest["version"] = 1
     manifest.pop("tuning", None)
     for entry in manifest["kernels"]:
         entry["heatmap"].pop("shards", None)
+        entry.pop("scratch_words", None)
     mpath.write_text(json.dumps(manifest))
     it = load_iteration(path)
     assert it.kernels[0].shards == ()
@@ -230,15 +232,34 @@ def test_v1_artifact_still_loads(tmp_path):
 
 
 def test_v2_artifact_still_loads(tmp_path):
-    """The v3 loader reads v2 artifacts (shards, but no tuning key)."""
+    """The v4 loader reads v2 artifacts (shards, but no tuning key)."""
     path = write_iteration(tmp_path / "iter0", [_profiled()])
     mpath = path / "manifest.json"
     manifest = json.loads(mpath.read_text())
     manifest["version"] = 2
     manifest.pop("tuning", None)
+    for entry in manifest["kernels"]:
+        entry.pop("scratch_words", None)
     mpath.write_text(json.dumps(manifest))
     it = load_iteration(path)
     assert it.tuning is None
+    assert heatmaps_equal(it.kernels[0].heatmap, _profiled().heatmap)
+
+
+def test_v3_artifact_still_loads(tmp_path):
+    """The v4 loader reads v3 artifacts (tuning, but no scratch_words)."""
+    path = write_iteration(tmp_path / "iter0", [_profiled()],
+                           tuning={"family": "gemm", "step": 0})
+    mpath = path / "manifest.json"
+    manifest = json.loads(mpath.read_text())
+    manifest["version"] = 3
+    for entry in manifest["kernels"]:
+        entry.pop("scratch_words", None)
+    mpath.write_text(json.dumps(manifest))
+    it = load_iteration(path)
+    assert it.tuning == {"family": "gemm", "step": 0}
+    # the derived metric is recomputed from the arrays regardless
+    assert it.kernels[0].scratch_words == _profiled().scratch_words
     assert heatmaps_equal(it.kernels[0].heatmap, _profiled().heatmap)
 
 
