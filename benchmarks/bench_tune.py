@@ -8,7 +8,9 @@ variant of every laddered kernel family and records, per family:
 * modeled-transaction speedup of the winning variant (the Table III
   currency),
 * which patterns the trajectory fixed,
-* how many candidates the budget bought and the wall time spent.
+* how many candidates the budget bought and the wall time spent,
+* how many candidates the static lint pre-screen skipped outright
+  (``tune_static_skipped`` — proved worse from the spec, never traced).
 
 The acceptance bar mirrors the repo's tuning-loop contract: at least
 **3 families** must end on a variant with strictly fewer sector
@@ -157,6 +159,26 @@ def run(
             f"{len(families)} cold families + 1 warm rerun",
         )
     )
+    # static pre-screen accounting: candidates the linter proved worse
+    # and the loop therefore never traced (tuner static_skipped
+    # provenance).  The registry is expected to exercise the screen —
+    # gemm's transpose candidates and gramschm's pin(qT) are statically
+    # worse by construction — so a zero here means the pre-screen
+    # stopped firing, not that there was nothing to skip.
+    skipped = sum(len(d["static_skipped"]) for d in results)
+    assert skipped >= 1, (
+        "no candidate was statically pre-screened across "
+        f"{len(families)} families — the tuner's lint pre-screen is dead"
+    )
+    rows.append(
+        (
+            "tune_static_skipped",
+            float(skipped),
+            "candidates the static linter proved worse — never traced, "
+            "zero budget spent",
+        )
+    )
+    print(f"static prescreen: {skipped} candidates never traced")
     closed = sum(
         1 for d in results if d["improved"] and d["fixed"]
     )

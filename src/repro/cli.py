@@ -3,7 +3,13 @@
 Subcommands (see ``docs/cli.md`` for transcripts):
 
 * ``cuthermo kernels`` — list the registered case-study kernels and
-  their optimization-ladder variants.
+  their optimization-ladder variants (``--lint`` adds each variant's
+  static verdict).
+* ``cuthermo lint gemm:v00`` — static heat-map prediction: probe each
+  operand's index map for an affine model and predict inefficiency
+  patterns (plus spec bugs like out-of-bounds origins) without running
+  or tracing anything; exits 0 clean / 1 findings / 2 usage error,
+  ``--strict`` promotes warnings to failures.
 * ``cuthermo profile --kernel gemm --out sess/`` — profile one or more
   kernels into the next iteration of a session directory.
 * ``cuthermo report sess/iter0`` — rebuild the report bundle (HTML
@@ -15,10 +21,14 @@ Subcommands (see ``docs/cli.md`` for transcripts):
   artifact under configurable thresholds and/or scan a session's own
   rolling history for anomalies (``--anomaly``), emit a
   schema-versioned JSON report, and exit 0 (pass) / 1 (gate failure) /
-  2 (usage or load error).
+  2 (usage or load error).  ``--static`` gates two *registry refs*
+  on their lint reports instead — no traces, no artifacts.
 * ``cuthermo tune gemm --out sess/`` — close the loop unattended: map
   advisor actions to candidate variants, re-profile, keep improvements,
   repeat until the patterns are fixed or the budget runs out.
+  Candidates the static linter prices as strictly worse than the
+  incumbent are skipped before any trace (``--no-prescreen`` disables;
+  skips are recorded as ``static_skipped`` provenance).
 * ``cuthermo tune --all --budget 16`` — the concurrent scheduler: tune
   every family (or a listed subset) together on one shared worker pool
   under one global budget, deterministic per ``--seed``.  ``--cache
@@ -49,7 +59,47 @@ def _build_parser() -> argparse.ArgumentParser:
     k = sub.add_parser(
         "kernels", help="list registered kernels and their variants"
     )
+    k.add_argument(
+        "--lint",
+        action="store_true",
+        help="add each variant's static lint verdict (clean/dirty/error) "
+        "and predicted pattern classes — no kernels are run",
+    )
     k.set_defaults(func=_cmd_kernels)
+
+    ln = sub.add_parser(
+        "lint",
+        help="statically predict heat-map inefficiencies from specs "
+        "alone (no runs, no traces; exit 0 clean / 1 findings / 2 error)",
+    )
+    ln.add_argument(
+        "ref",
+        nargs="*",
+        metavar="NAME[:VARIANT]",
+        help="registry refs to lint ('gemm' lints the baseline variant)",
+    )
+    ln.add_argument(
+        "--all", action="store_true",
+        help="lint every variant of every registered kernel",
+    )
+    ln.add_argument(
+        "--strict",
+        action="store_true",
+        help="promote warning-level findings to failures (exit 1); "
+        "error-level findings always fail",
+    )
+    ln.add_argument(
+        "--json",
+        default=None,
+        metavar="PATH",
+        help="write the schema-versioned JSON lint document to PATH "
+        "('-' for stdout; the human summary then moves to stderr)",
+    )
+    ln.add_argument(
+        "--quiet", "-q", action="store_true",
+        help="suppress the human summary (exit code + JSON only)",
+    )
+    ln.set_defaults(func=_cmd_lint)
 
     pr = sub.add_parser(
         "profile",
@@ -162,6 +212,14 @@ def _build_parser() -> argparse.ArgumentParser:
         default=None,
         metavar="DIR",
         help="baseline iteration (or session) directory to gate against",
+    )
+    ck.add_argument(
+        "--static",
+        action="store_true",
+        help="no-trace gate: candidate and --baseline are registry refs "
+        "(NAME[:VARIANT]) compared on their static lint reports — no "
+        "session artifacts are read or written (incompatible with "
+        "--anomaly and --region-map)",
     )
     ck.add_argument(
         "--anomaly",
@@ -301,6 +359,12 @@ def _build_parser() -> argparse.ArgumentParser:
         help="only try registry ladder variants, no generated candidates",
     )
     tn.add_argument(
+        "--no-prescreen",
+        action="store_true",
+        help="disable the static pre-screen (profile even candidates the "
+        "linter prices as strictly worse than the incumbent)",
+    )
+    tn.add_argument(
         "--report",
         action="store_true",
         help="write the report bundle (with the tuning trajectory) to "
@@ -346,6 +410,9 @@ def _cmd_kernels(args: argparse.Namespace) -> int:
     """Handler for ``cuthermo kernels``."""
     from repro import kernels as kreg
 
+    if args.lint:
+        from repro.core.lint import lint_ref
+
     for name in kreg.names():
         entry = kreg.get(name)
         variants = ", ".join(
@@ -353,8 +420,79 @@ def _cmd_kernels(args: argparse.Namespace) -> int:
             for i, v in enumerate(entry.variants)
         )
         print(f"{name:<12} [{variants}]  {entry.summary}")
+        if args.lint:
+            for v in entry.variants:
+                rep = lint_ref(f"{name}:{v.name}")
+                preds = ", ".join(
+                    f"{f.pattern}({f.region})" for f in rep.findings
+                )
+                tx = (
+                    "dynamic"
+                    if rep.static_transactions is None
+                    else f"{rep.static_transactions} transfers"
+                )
+                print(
+                    f"  {v.name:<10} {rep.verdict():<6} {tx}"
+                    + (f"  [{preds}]" if preds else "")
+                )
     print("(* = default/baseline variant)")
+    if args.lint:
+        print("(static lint verdicts: no kernels were run or traced)")
     return 0
+
+
+def _cmd_lint(args: argparse.Namespace) -> int:
+    """Handler for ``cuthermo lint``.
+
+    Exit-code contract (same family as ``check``): 0 clean (or only
+    warnings without ``--strict``), 1 findings gate the run (any
+    error-level finding; warnings too under ``--strict``), 2 usage
+    error (no refs, unknown ref).
+    """
+    import json as _json
+
+    from repro import kernels as kreg
+    from repro.core.lint import LintError, lint_document, lint_ref
+
+    refs = list(args.ref)
+    if args.all:
+        for name in kreg.names():
+            for v in kreg.get(name).variants:
+                ref = f"{name}:{v.name}"
+                if ref not in refs:
+                    refs.append(ref)
+    if not refs:
+        print(
+            "cuthermo lint: nothing to lint "
+            "(pass NAME[:VARIANT] refs or --all)",
+            file=sys.stderr,
+        )
+        return 2
+    reports = []
+    for ref in refs:
+        try:
+            reports.append(lint_ref(ref))
+        except (KeyError, LintError) as e:
+            msg = e.args[0] if e.args else e
+            print(f"cuthermo: {msg}", file=sys.stderr)
+            return 2
+    doc = lint_document(reports, strict=args.strict)
+    human = "\n\n".join(rep.summary() for rep in reports)
+    if not doc["passed"]:
+        n = len(doc["failures"])
+        human += f"\nlint FAILED ({n} finding{'s' if n != 1 else ''} gate)"
+    if args.json == "-":
+        print(_json.dumps(doc, indent=2))
+        if not args.quiet:
+            print(human, file=sys.stderr)
+    else:
+        if args.json:
+            with open(args.json, "w") as fh:
+                _json.dump(doc, fh, indent=2)
+                fh.write("\n")
+        if not args.quiet:
+            print(human)
+    return 0 if doc["passed"] else 1
 
 
 def _cmd_profile(args: argparse.Namespace) -> int:
@@ -533,8 +671,33 @@ def _cmd_report(args: argparse.Namespace) -> int:
                 check = doc
         except (OSError, ValueError):
             check = None
+    # predicted-vs-observed lint cross-tab: re-lint each kernel's
+    # registry ref (specs are cheap to rebuild; no traces) and line the
+    # static predictions up against the stored dynamic detections.
+    # Best-effort: tuner-generated variants (pin(A), retile 2x...) have
+    # no registry ref and are simply skipped.
+    lint = []
+    from repro.core.lint import LintError, lint_ref, predicted_vs_observed
+
+    for pk in kernels:
+        family = pk.name.partition(":")[0]
+        ref = f"{family}:{pk.variant}"
+        try:
+            rep = lint_ref(ref)
+        except (KeyError, LintError):
+            continue
+        lint.append(
+            {
+                "kernel": pk.name,
+                "ref": ref,
+                "verdict": rep.verdict(),
+                "static_transactions": rep.static_transactions,
+                "rows": predicted_vs_observed(rep, pk.reports),
+            }
+        )
     written = write_report_bundle(
-        entries, out, title=title, tuning=tuning, check=check
+        entries, out, title=title, tuning=tuning, check=check,
+        lint=lint or None,
     )
     print(f"wrote {written['index.html']}")
     print(f"wrote {written['report.md']}")
@@ -575,6 +738,7 @@ def _cmd_tune(args: argparse.Namespace) -> int:
                     target_patterns=args.target_pattern or None,
                     seed=args.seed,
                     use_generated=not args.no_generated,
+                    static_prescreen=not args.no_prescreen,
                     session=sess,
                     collector=sess.collector(workers),
                     cache=sess.cache,
@@ -597,6 +761,7 @@ def _cmd_tune(args: argparse.Namespace) -> int:
                         target_patterns=args.target_pattern or None,
                         seed=args.seed,
                         use_generated=not args.no_generated,
+                        static_prescreen=not args.no_prescreen,
                         workers=workers,
                         progress=progress,
                     )
@@ -694,6 +859,7 @@ def _cmd_check(args: argparse.Namespace) -> int:
         CheckThresholds,
         check_iterations,
         check_session_anomalies,
+        check_static,
         merge_reports,
     )
     from repro.core.session import ProfileSession, SessionError
@@ -713,6 +879,42 @@ def _cmd_check(args: argparse.Namespace) -> int:
     except CheckError as e:
         print(f"cuthermo: {e}", file=sys.stderr)
         return 2
+
+    if args.static:
+        if args.anomaly or args.region_map:
+            print(
+                "cuthermo check: --static takes registry refs and is "
+                "incompatible with --anomaly / --region-map (the family's "
+                "registry region_map applies automatically)",
+                file=sys.stderr,
+            )
+            return 2
+        if not args.baseline:
+            print(
+                "cuthermo check: --static needs --baseline NAME[:VARIANT]",
+                file=sys.stderr,
+            )
+            return 2
+        try:
+            report = check_static(
+                args.candidate, args.baseline, thresholds=thresholds
+            )
+        except CheckError as e:
+            print(f"cuthermo: {e}", file=sys.stderr)
+            return 2
+        doc = report.as_dict()
+        if args.json == "-":
+            print(_json.dumps(doc, indent=2))
+            if not args.quiet:
+                print(report.summary(), file=sys.stderr)
+        else:
+            if args.json:
+                with open(args.json, "w") as fh:
+                    _json.dump(doc, fh, indent=2)
+                    fh.write("\n")
+            if not args.quiet:
+                print(report.summary())
+        return 0 if report.passed else 1
 
     report = None
     candidate_it = None

@@ -584,6 +584,168 @@ def check_iterations(
 
 
 # ---------------------------------------------------------------------------
+# the static gate (no traces: lint reports on registry refs)
+# ---------------------------------------------------------------------------
+
+
+def _static_rename(
+    family_map: Sequence[Tuple[str, str]],
+    base_regions: Sequence[str],
+    cand_regions: Sequence[str],
+) -> Dict[str, str]:
+    """Orient a registry region_map for a baseline->candidate lint pair.
+
+    Registry region maps are written ladder-upward (e.g. gramschm's
+    ``q -> qT``); a static check may compare in either direction, so
+    each pair is applied in whichever orientation matches the regions
+    the two lint reports actually carry.
+    """
+    base, cand = set(base_regions), set(cand_regions)
+    rename: Dict[str, str] = {}
+    for b, c in family_map:
+        if b in base and c in cand:
+            rename[b] = c
+        elif c in base and b in cand:
+            rename[c] = b
+    return rename
+
+
+def check_static(
+    candidate_ref: str,
+    baseline_ref: str,
+    thresholds: Optional[CheckThresholds] = None,
+) -> CheckReport:
+    """Gate a candidate registry ref against a baseline ref *statically*.
+
+    Both refs (``family:variant`` or bare family) are linted with
+    :func:`repro.core.lint.lint_ref` — no kernel runs, no traces, no
+    session artifacts — and the two :class:`~repro.core.lint.LintReport`
+    objects are compared under the same :class:`CheckThresholds`
+    vocabulary the dynamic gate uses:
+
+    * modeled-transfer growth against ``max_transfer_pct`` (the linter's
+      exact replay of the collector's transaction model; for specs with
+      dynamic operands the partial static floor over modeled operands
+      stands in),
+    * new / worsened / fixed findings by ``(region, pattern)`` class,
+      with the family's registry ``region_map`` applied in whichever
+      orientation matches when both refs belong to one family,
+    * candidate *error*-level findings (out-of-bounds origins, dead
+      operands) always fail, independent of thresholds.
+
+    Returns a :class:`CheckReport` with ``mode='static'``.  Unknown
+    refs raise :class:`CheckError` (CLI exit 2, never gate-failure 1).
+    """
+    from . import lint as lint_mod
+    from .. import kernels as kreg
+
+    thresholds = thresholds or CheckThresholds()
+    reports = {}
+    for label, ref in (("baseline", baseline_ref), ("candidate", candidate_ref)):
+        try:
+            reports[label] = lint_mod.lint_ref(ref)
+        except (KeyError, lint_mod.LintError) as exc:
+            raise CheckError(f"{label} ref {ref!r}: {exc}") from exc
+    base, cand = reports["baseline"], reports["candidate"]
+
+    base_family = base.kernel.partition(":")[0]
+    cand_family = cand.kernel.partition(":")[0]
+    rename: Dict[str, str] = {}
+    if base_family == cand_family:
+        family_map = getattr(kreg.get(base_family), "region_map", ())
+        rename = _static_rename(
+            family_map,
+            [ov.region for ov in base.operands],
+            [ov.region for ov in cand.operands],
+        )
+    inv = {v: k for k, v in rename.items()}
+
+    def _tx(report) -> int:
+        if report.static_transactions is not None:
+            return report.static_transactions
+        return sum(
+            ov.modeled_transactions
+            for ov in report.operands
+            if ov.modeled_transactions is not None
+        )
+
+    tx_before, tx_after = _tx(base), _tx(cand)
+    tx_delta = pct_delta(tx_before, tx_after)
+    failures: List[str] = []
+    if tx_after > tx_before and _exceeds(tx_delta, thresholds.max_transfer_pct):
+        failures.append(
+            f"modeled transfers {tx_before} -> {tx_after} "
+            f"({_fmt_pct(tx_delta)} > +{thresholds.max_transfer_pct:g}% "
+            "budget, static model)"
+        )
+
+    for f in cand.errors:
+        failures.append(f"lint error: {f.rule} on {f.region} — {f.evidence[0]}")
+
+    base_sev = {(f.region, f.pattern): float(f.severity) for f in base.findings}
+    cand_sev = {
+        (inv.get(f.region, f.region), f.pattern): float(f.severity)
+        for f in cand.findings
+    }
+    allowed = set(thresholds.allowed_patterns)
+    new_patterns = tuple(
+        (r, p) for r, p in sorted(cand_sev)
+        if (r, p) not in base_sev and p not in allowed
+    )
+    if new_patterns and thresholds.fail_on_new_patterns:
+        failures.extend(f"new pattern: {p} on {r}" for r, p in new_patterns)
+    fixed = tuple(
+        (r, p) for r, p in sorted(base_sev) if (r, p) not in cand_sev
+    )
+    worsened = []
+    for (r, p), sb in sorted(base_sev.items()):
+        if p in allowed or (r, p) not in cand_sev:
+            continue
+        sa = cand_sev[(r, p)]
+        if sa - sb > thresholds.max_severity_increase:
+            worsened.append((r, p, sb, sa))
+            failures.append(
+                f"worsened pattern: {p} on {r} "
+                f"(severity {sb:.2f} -> {sa:.2f}, "
+                f"+{sa - sb:.2f} > +{thresholds.max_severity_increase:g})"
+            )
+
+    kc = KernelCheck(
+        kernel=f"{base.kernel} -> {cand.kernel}",
+        status="fail" if failures else "pass",
+        verdict=cand.verdict(),
+        failures=tuple(failures),
+        transactions_before=tx_before,
+        transactions_after=tx_after,
+        transactions_delta_pct=tx_delta,
+        new_patterns=new_patterns,
+        fixed_patterns=fixed,
+        worsened_patterns=tuple(worsened),
+    )
+    agg_failures: Tuple[str, ...] = ()
+    if tx_after > tx_before and _exceeds(tx_delta, thresholds.max_aggregate_pct):
+        agg_failures = (
+            f"total modeled transfers {tx_before} -> {tx_after} "
+            f"({_fmt_pct(tx_delta)} > +{thresholds.max_aggregate_pct:g}% "
+            "budget)",
+        )
+    return CheckReport(
+        mode="static",
+        candidate=cand.kernel,
+        baseline=base.kernel,
+        thresholds=thresholds,
+        kernels=(kc,),
+        aggregate=AggregateCheck(
+            transactions_before=tx_before,
+            transactions_after=tx_after,
+            delta_pct=tx_delta,
+            budget_pct=thresholds.max_aggregate_pct,
+            failures=agg_failures,
+        ),
+    )
+
+
+# ---------------------------------------------------------------------------
 # cross-iteration anomaly detection
 # ---------------------------------------------------------------------------
 
@@ -754,6 +916,7 @@ __all__ = [
     "KernelCheck",
     "check_iterations",
     "check_session_anomalies",
+    "check_static",
     "detect_anomalies",
     "merge_reports",
     "pct_delta",

@@ -159,8 +159,10 @@ def _eval_index_map_batch(
 
     Tries one vectorized call with array arguments (exact for the
     arithmetic lambdas BlockSpecs are made of), validated against scalar
-    evaluation of the batch's first and last program; falls back to the
-    per-program loop for maps that don't broadcast.
+    evaluation at the batch's first, middle, and last program — a
+    piecewise map whose vectorized form happens to agree at both
+    endpoints must not silently miscollect the interior; falls back to
+    the per-program loop for maps that don't broadcast.
     Returns (P, k) int64 block coordinates.
     """
     p, ndim = pids.shape
@@ -177,17 +179,116 @@ def _eval_index_map_batch(
                 for o in out
             ]
             arr = np.stack(cols, axis=1)
-            lo, hi = _scalar(pids[0]), _scalar(pids[-1])
-            if (
-                len(lo) == arr.shape[1]
-                and tuple(arr[0].tolist()) == lo
-                and tuple(arr[-1].tolist()) == hi
-            ):
+            ok = True
+            for i in sorted({0, p // 2, p - 1}):
+                want = _scalar(pids[i])
+                if (
+                    len(want) != arr.shape[1]
+                    or tuple(arr[i].tolist()) != want
+                ):
+                    ok = False
+                    break
+            if ok:
                 return arr
         except Exception:
             pass
     rows = [_scalar(pids[i]) for i in range(p)]
     return np.asarray(rows, dtype=np.int64).reshape(p, -1)
+
+
+@dataclasses.dataclass(frozen=True)
+class AffineModel:
+    """Affine index-map model ``f(pid)[c] = base[c] + Σ_a coeffs[c][a]·pid[a]``.
+
+    Extracted by :func:`probe_affine_map` and consumed by the static
+    linter (:mod:`repro.core.lint`): the coefficient matrix is the
+    "adjacent-pid delta" table every geometric rule reads — how the
+    block key moves when one grid coordinate advances by one.
+    """
+
+    base: Tuple[int, ...]
+    coeffs: Tuple[Tuple[int, ...], ...]  # coeffs[c][a]: d out[c] / d pid[a]
+
+    @property
+    def n_out(self) -> int:
+        """Number of output components (the block-key arity)."""
+        return len(self.base)
+
+    def predict(self, pid: Sequence[int]) -> Tuple[int, ...]:
+        """Evaluate the model at one program coordinate."""
+        return tuple(
+            b + sum(c * int(x) for c, x in zip(row, pid))
+            for b, row in zip(self.base, self.coeffs)
+        )
+
+    def predict_batch(self, pids: np.ndarray) -> np.ndarray:
+        """(P, n_out) model predictions for a (P, ndim) coordinate batch."""
+        base = np.asarray(self.base, dtype=np.int64)
+        coef = np.asarray(self.coeffs, dtype=np.int64)
+        return base[None, :] + np.asarray(pids, dtype=np.int64) @ coef.T
+
+
+def _affine_probe_points(grid: Tuple[int, ...]) -> List[Tuple[int, ...]]:
+    """Sparse corner/edge/middle validation points of one grid."""
+    ndim = len(grid)
+    origin = (0,) * ndim
+    last = tuple(g - 1 for g in grid)
+    mid = tuple(g // 2 for g in grid)
+    points = {origin, last, mid}
+    for a in range(ndim):
+        for v in (grid[a] - 1, grid[a] // 2):
+            lo = list(origin)
+            lo[a] = v
+            points.add(tuple(lo))
+            hi = list(last)
+            hi[a] = v
+            points.add(tuple(hi))
+    return sorted(points)
+
+
+def probe_affine_map(
+    index_map: IndexMap, grid: Sequence[int]
+) -> Optional[AffineModel]:
+    """Extract an affine model of ``index_map`` over ``grid``, or ``None``.
+
+    Reads the base off ``f(0, ..., 0)`` and each axis coefficient off
+    the unit-vector probe ``f(e_a) - f(0)``, then validates the model by
+    scalar evaluation (the collector's ground truth) at sparse corner,
+    edge, and middle points of the grid.  Maps that raise, change output
+    arity, or disagree with the model anywhere probed are reported as
+    non-affine (``None``) — the caller must fall back to exhaustive
+    evaluation or an explicit ``nonaffine`` verdict.  Axes of extent 1
+    contribute coefficient 0 (the map is never evaluated off-grid).
+    """
+    grid = tuple(int(g) for g in grid)
+    ndim = len(grid)
+
+    def at(pid: Sequence[int]) -> Tuple[int, ...]:
+        idx = _normalize_index(index_map(*[int(x) for x in pid]))
+        return tuple(int(i) for i in idx)
+
+    try:
+        base = at((0,) * ndim)
+        coeffs = [[0] * ndim for _ in base]
+        for a in range(ndim):
+            if grid[a] < 2:
+                continue
+            probe = [0] * ndim
+            probe[a] = 1
+            out = at(probe)
+            if len(out) != len(base):
+                return None
+            for c in range(len(base)):
+                coeffs[c][a] = out[c] - base[c]
+        model = AffineModel(
+            base=base, coeffs=tuple(tuple(row) for row in coeffs)
+        )
+        for pt in _affine_probe_points(grid):
+            if at(pt) != model.predict(pt):
+                return None
+    except Exception:
+        return None
+    return model
 
 
 def _touch_arrays_for_key(

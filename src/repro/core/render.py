@@ -527,12 +527,110 @@ def _check_section_markdown(check: Mapping) -> List[str]:
     return lines
 
 
+def _lint_section_html(lint: Sequence[Mapping]) -> str:
+    """Predicted-vs-observed cross-tab of the HTML bundle.
+
+    ``lint`` is a sequence of per-kernel dicts carrying the static lint
+    verdict plus ``predicted_vs_observed`` rows (see
+    ``repro.core.lint.predicted_vs_observed``): each row lines one
+    ``(region, pattern)`` class up across the two pipelines — ``agree``
+    (both saw it), ``static-only`` (the linter predicted something the
+    trace could not confirm), ``dynamic-only`` (the trace found
+    something the affine model cannot see, e.g. data-dependent maps).
+    """
+    if not lint:
+        return ""
+    parts = [
+        "<h3>static lint: predicted vs observed</h3>",
+        "<p class='evidence'>the linter's no-trace predictions "
+        "(affine index-map model) lined up against the traced "
+        "detections; dynamic-only rows are what static analysis "
+        "fundamentally cannot see.</p>",
+    ]
+    for entry in lint:
+        rows = entry.get("rows") or ()
+        tx = entry.get("static_transactions")
+        tx_s = "dynamic (no static total)" if tx is None else f"{tx} transfers"
+        parts.append(
+            f"<div class='card'><h4>{_html.escape(str(entry.get('kernel')))}"
+            f" &middot; lint {_html.escape(str(entry.get('verdict', '')))}"
+            f" &middot; {_html.escape(tx_s)}</h4>"
+        )
+        if rows:
+            parts.append(
+                "<table><tr><th>pattern</th><th>region</th><th>status</th>"
+                "<th>predicted sev</th><th>observed sev</th><th>rule</th>"
+                "</tr>"
+            )
+            for r in rows:
+                status = str(r.get("status", ""))
+                sclass = (
+                    " class='verdict-improved'" if status == "agree"
+                    else (
+                        " class='verdict-regressed'"
+                        if status == "dynamic-only" else ""
+                    )
+                )
+                ps, os_ = r.get("predicted_severity"), r.get("observed_severity")
+                parts.append(
+                    f"<tr><td>{_html.escape(str(r.get('pattern')))}</td>"
+                    f"<td>{_html.escape(str(r.get('region')))}</td>"
+                    f"<td{sclass}>{_html.escape(status)}</td>"
+                    f"<td>{'&mdash;' if ps is None else f'{ps:.2f}'}</td>"
+                    f"<td>{'&mdash;' if os_ is None else f'{os_:.2f}'}</td>"
+                    f"<td>{_html.escape(str(r.get('rule') or '—'))}</td></tr>"
+                )
+            parts.append("</table>")
+        else:
+            parts.append(
+                "<p class='evidence'>clean both ways: nothing predicted, "
+                "nothing observed</p>"
+            )
+        parts.append("</div>")
+    return "".join(parts)
+
+
+def _lint_section_markdown(lint: Sequence[Mapping]) -> List[str]:
+    """Markdown lines of the predicted-vs-observed cross-tab."""
+    if not lint:
+        return []
+    lines = ["", "## static lint: predicted vs observed", ""]
+    for entry in lint:
+        tx = entry.get("static_transactions")
+        tx_s = "dynamic" if tx is None else f"{tx} transfers"
+        lines += [
+            f"### {entry.get('kernel')} — lint {entry.get('verdict', '')}, "
+            f"{tx_s}",
+            "",
+        ]
+        rows = entry.get("rows") or ()
+        if not rows:
+            lines += ["clean both ways: nothing predicted, nothing observed",
+                      ""]
+            continue
+        lines += [
+            "| pattern | region | status | predicted sev | observed sev |",
+            "|---|---|---|---:|---:|",
+        ]
+        for r in rows:
+            ps, os_ = r.get("predicted_severity"), r.get("observed_severity")
+            lines.append(
+                f"| {r.get('pattern')} | {r.get('region')} "
+                f"| {r.get('status')} "
+                f"| {'—' if ps is None else f'{ps:.2f}'} "
+                f"| {'—' if os_ is None else f'{os_:.2f}'} |"
+            )
+        lines.append("")
+    return lines
+
+
 def render_session_html(
     entries: Sequence[ReportEntry],
     title: str = "cuthermo report",
     max_runs_per_region: int = 64,
     tuning: Optional[Sequence[Mapping]] = None,
     check: Optional[Mapping] = None,
+    lint: Optional[Sequence[Mapping]] = None,
 ) -> str:
     """Self-contained HTML gallery for one profiled iteration.
 
@@ -580,6 +678,8 @@ def render_session_html(
         parts.append(chart)
     if check:
         parts.append(_check_section_html(check))
+    if lint:
+        parts.append(_lint_section_html(lint))
     if tuning:
         parts.append(_tuning_section_html(tuning))
     # per-kernel sections
@@ -678,6 +778,7 @@ def render_session_markdown(
     title: str = "cuthermo report",
     tuning: Optional[Sequence[Mapping]] = None,
     check: Optional[Mapping] = None,
+    lint: Optional[Sequence[Mapping]] = None,
 ) -> str:
     """Markdown digest of one iteration (the commit-message artifact)."""
     lines = [f"# {title}", ""]
@@ -729,6 +830,8 @@ def render_session_markdown(
             )
     if check:
         lines += _check_section_markdown(check)
+    if lint:
+        lines += _lint_section_markdown(lint)
     if tuning:
         lines += _tuning_section_markdown(tuning)
     lines.append("")
@@ -741,6 +844,7 @@ def write_report_bundle(
     title: str = "cuthermo report",
     tuning: Optional[Sequence[Mapping]] = None,
     check: Optional[Mapping] = None,
+    lint: Optional[Sequence[Mapping]] = None,
 ) -> Dict[str, str]:
     """Write a whole-iteration report bundle into ``out_dir``.
 
@@ -749,8 +853,9 @@ def write_report_bundle(
     Fig. 5 CSV artifact).  ``tuning`` (trajectory dicts, see
     ``render_session_html``) adds the tuning-trajectory section to both
     digests; ``check`` (a ``cuthermo check`` report document) adds the
-    regression-gate verdict.  Returns a name->path mapping of
-    everything written.
+    regression-gate verdict; ``lint`` (per-kernel predicted-vs-observed
+    dicts, see ``_lint_section_html``) adds the static-lint cross-tab.
+    Returns a name->path mapping of everything written.
     """
     os.makedirs(out_dir, exist_ok=True)
     written: Dict[str, str] = {}
@@ -758,7 +863,7 @@ def write_report_bundle(
     with open(index, "w") as f:
         f.write(
             render_session_html(
-                entries, title=title, tuning=tuning, check=check
+                entries, title=title, tuning=tuning, check=check, lint=lint
             )
         )
     written["index.html"] = index
@@ -766,7 +871,7 @@ def write_report_bundle(
     with open(md, "w") as f:
         f.write(
             render_session_markdown(
-                entries, title=title, tuning=tuning, check=check
+                entries, title=title, tuning=tuning, check=check, lint=lint
             )
         )
     written["report.md"] = md

@@ -959,6 +959,7 @@ class ProfileSession:
         target_patterns: Optional[Sequence[str]] = None,
         seed: int = 0,
         use_generated: bool = True,
+        static_prescreen: bool = True,
         workers: Optional[int] = None,
         progress=None,
     ):
@@ -967,10 +968,11 @@ class ProfileSession:
         Thin front end over :func:`repro.core.tuner.tune`: the baseline
         profile and every candidate re-profile are persisted as numbered
         iterations of this session, each manifest carrying the tuning
-        provenance (which advisor Action spawned which candidate).
-        ``budget`` defaults to :data:`repro.core.tuner.DEFAULT_BUDGET`.
-        Returns the :class:`~repro.core.tuner.TuneResult`; the stored
-        trajectory is recoverable later with
+        provenance (which advisor Action spawned which candidate, which
+        candidates the static pre-screen skipped).  ``budget`` defaults
+        to :data:`repro.core.tuner.DEFAULT_BUDGET`.  Returns the
+        :class:`~repro.core.tuner.TuneResult`; the stored trajectory is
+        recoverable later with
         :func:`repro.core.tuner.trajectories_from_session`.
         """
         from .tuner import DEFAULT_BUDGET, tune as _tune
@@ -981,6 +983,7 @@ class ProfileSession:
             target_patterns=target_patterns,
             seed=seed,
             use_generated=use_generated,
+            static_prescreen=static_prescreen,
             session=self,
             collector=self.collector(workers),
             cache=self.cache,

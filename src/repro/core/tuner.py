@@ -45,6 +45,7 @@ from .cache import CollectionCache
 from .collector import KernelSpec, OperandSpec, ShardedCollector
 from .diff import HeatmapDiff, diff as diff_heatmaps
 from .heatmap import Heatmap
+from .lint import static_transactions
 from .session import (
     ProfiledKernel,
     ProfileSession,
@@ -445,6 +446,11 @@ def candidates_for_action(
     if action.kind == "retile":
         for f in _retile_factors(spec, action.region):
             out += cand("retile", retile_spec(spec, action.region, f), factor=f)
+        # a layout flip also de-interleaves falsely-shared sublanes; it
+        # usually costs more than it saves (the static pre-screen prices
+        # it without tracing), but when re-gridding cannot be certified
+        # it is the only structural move left
+        out += cand("transpose", transpose_spec(spec, action.region))
     elif action.kind in ("vmem_pin", "reorder_grid"):
         out += cand("pin", pin_spec(spec, action.region))
     elif action.kind == "pad_align":
@@ -551,6 +557,9 @@ class TuneResult:
     seed: int
     wall_s: float
     baseline_iteration: str = ""
+    # candidates the static pre-screen proved worse and never profiled
+    # (see _TuneLoop._prescreen); they consume no budget and no traces
+    static_skipped: Tuple[dict, ...] = ()
 
     @property
     def speedup(self) -> float:
@@ -608,6 +617,7 @@ class TuneResult:
             "converged": self.converged,
             "wall_s": self.wall_s,
             "steps": [s.as_dict() for s in self.steps],
+            "static_skipped": list(self.static_skipped),
         }
 
     def summary(self) -> str:
@@ -630,6 +640,12 @@ class TuneResult:
                 f"{s.transactions} transfers "
                 f"({s.diff.speedup_estimate:.2f}x vs best, "
                 f"{s.diff.verdict}){fixed} => {mark}"
+            )
+        if self.static_skipped:
+            labels = ", ".join(s["label"] for s in self.static_skipped)
+            lines.append(
+                f"  prescreen: {len(self.static_skipped)} candidate(s) "
+                f"statically worse, never traced ({labels})"
             )
         status = "converged" if self.converged else "budget exhausted"
         lines.append(
@@ -711,6 +727,7 @@ class _TuneLoop:
         target_patterns: Optional[Sequence[str]] = None,
         seed: int = 0,
         use_generated: bool = True,
+        static_prescreen: bool = True,
         session: Optional[ProfileSession] = None,
         sampler: Optional[GridSampler] = None,
         progress: Optional[Callable[[str], None]] = None,
@@ -725,6 +742,7 @@ class _TuneLoop:
         self.seed = seed
         self.target_patterns = target_patterns
         self.use_generated = use_generated
+        self.static_prescreen = static_prescreen
         self.session = session
         self.sampler = sampler or self.entry.sampler()
         self.say = progress or (lambda _msg: None)
@@ -744,6 +762,14 @@ class _TuneLoop:
             self._variant_names.index(self.start.name) + 1
         )
         self._cum_map: Dict[str, str] = {}
+        # static pre-screen bookkeeping: every skipped candidate's record
+        # (cumulative + pending for the next persisted iteration), the
+        # specs the screen already built, and the skipped labels (so a
+        # queue regeneration cannot re-propose them)
+        self.static_skipped: List[dict] = []
+        self._pending_skips: List[dict] = []
+        self._prebuilt: Dict[str, Tuple] = {}
+        self._skipped_labels: set = set()
 
     def _order_key(self, c: Candidate):
         if c.label not in self._jitter:
@@ -768,12 +794,19 @@ class _TuneLoop:
         spec: KernelSpec,
         ctx: Optional[Dict[str, np.ndarray]],
     ) -> None:
-        """Install the profiled baseline and generate the first queue."""
+        """Install the profiled baseline and generate the first queue.
+
+        The queue is generated *before* the baseline iteration persists:
+        the static pre-screen runs at queue-generation time, and the
+        candidates it skips belong to this iteration's provenance.
+        """
         self.baseline = pk
         self.say(
             f"baseline {self.entry.name}:{self.start.name}: "
             f"{pk.transactions} transfers"
         )
+        self.best, self._best_spec, self._best_ctx = pk, spec, ctx
+        self.queue = self._generate()
         if self.session is not None:
             it = self.session.add_iteration(
                 [pk],
@@ -786,11 +819,10 @@ class _TuneLoop:
                     "seed": self.seed,
                     "candidate": None,
                     "accepted": True,
+                    "static_skipped": self._take_pending_skips(),
                 },
             )
             self.baseline_iter = it.path.name
-        self.best, self._best_spec, self._best_ctx = pk, spec, ctx
-        self.queue = self._generate()
 
     def _generate(self) -> List[Candidate]:
         acts = _open_actions(self.best, self.target_patterns)
@@ -807,17 +839,68 @@ class _TuneLoop:
                 cands += candidates_for_action(
                     act, self._best_spec, self._best_ctx
                 )
-        # dedupe by label: against already-profiled steps AND within
-        # this batch (two actions can spawn the same transform, e.g.
-        # pin(B) from both a hot and a reorder_grid action)
-        seen = {s.candidate.label for s in self.steps}
+        # dedupe by label: against already-profiled steps, already-skipped
+        # candidates (the best only improves, so a statically-worse skip
+        # stays worse) AND within this batch (two actions can spawn the
+        # same transform, e.g. pin(B) from both a hot and a reorder_grid
+        # action)
+        seen = {s.candidate.label for s in self.steps} | self._skipped_labels
         uniq = []
         for c in cands:
             if c.label not in seen:
                 seen.add(c.label)
                 uniq.append(c)
         uniq.sort(key=self._order_key)
-        return uniq
+        if not self.static_prescreen:
+            return uniq
+        return self._prescreen(uniq)
+
+    def _prescreen(self, cands: List[Candidate]) -> List[Candidate]:
+        """Drop candidates the static model proves strictly worse.
+
+        Each candidate's spec is built once (and cached for
+        :meth:`propose`) and priced with ``lint.static_transactions`` —
+        the exact replay of the collector's transfer arithmetic.  A
+        candidate whose modeled total strictly exceeds the incumbent
+        best's would be rejected by :func:`_accepts` with certainty, so
+        profiling it is a guaranteed wasted trace: it is skipped without
+        consuming budget and recorded in the tuning provenance as
+        ``static_skipped``.  Specs the model cannot price (dynamic
+        operands) pass through unjudged.
+        """
+        kept: List[Candidate] = []
+        for c in cands:
+            try:
+                cspec, cctx = c.build()
+            except Exception:
+                kept.append(c)  # propose() reports the build failure
+                continue
+            tx = static_transactions(cspec, self.sampler)
+            if tx is not None and tx > self.best.transactions:
+                if c.variant:
+                    self.tried.add(c.variant)
+                self._skipped_labels.add(c.label)
+                record = {
+                    "label": c.label,
+                    "static_transactions": int(tx),
+                    "parent_transactions": int(self.best.transactions),
+                    "candidate": c.provenance(),
+                }
+                self.static_skipped.append(record)
+                self._pending_skips.append(record)
+                self.say(
+                    f"prescreen: {c.label} statically worse "
+                    f"({tx} > {self.best.transactions} transfers) — skipped"
+                )
+                continue
+            self._prebuilt[c.label] = (cspec, cctx)
+            kept.append(c)
+        return kept
+
+    def _take_pending_skips(self) -> List[dict]:
+        """Drain the skips accumulated since the last persisted iteration."""
+        skips, self._pending_skips = self._pending_skips, []
+        return skips
 
     def propose(
         self,
@@ -834,6 +917,11 @@ class _TuneLoop:
             cand = self.queue.pop(0)
             if cand.variant:
                 self.tried.add(cand.variant)
+            if cand.label in self._prebuilt:
+                # the static pre-screen already built (and priced) this
+                # spec at queue-generation time
+                cspec, cctx = self._prebuilt.pop(cand.label)
+                return cand, cspec, cctx
             try:
                 cspec, cctx = cand.build()
             except Exception as e:  # a candidate that fails to build is skipped
@@ -852,41 +940,28 @@ class _TuneLoop:
         cctx: Optional[Dict[str, np.ndarray]],
         pk: ProfiledKernel,
     ) -> TuneStep:
-        """Judge one profiled candidate and advance the loop state."""
+        """Judge one profiled candidate and advance the loop state.
+
+        An accepted candidate regenerates the queue *before* its
+        iteration persists: the static pre-screen runs during
+        regeneration and the candidates it skips belong to this step's
+        provenance.  The step is appended provisionally first (the
+        regeneration's label dedupe must see it) and patched with the
+        iteration name once known.
+        """
         step_map = _effective_region_map(
             dict(cand.region_map), self.best.heatmap, pk.heatmap
         )
         d = diff_heatmaps(self.best.heatmap, pk.heatmap, region_map=step_map)
         accepted = _accepts(d, self.best.heatmap, pk.heatmap)
         step_no = len(self.steps) + 1
-        iter_name = ""
-        if self.session is not None:
-            it = self.session.add_iteration(
-                [pk],
-                label=f"tune-{self.entry.name}-step{step_no}",
-                tuning={
-                    "family": self.entry.name,
-                    "step": step_no,
-                    "role": "candidate",
-                    "budget": self.budget,
-                    "seed": self.seed,
-                    "baseline": self.baseline_iter,
-                    "candidate": cand.provenance(),
-                    "verdict": d.verdict,
-                    "speedup_vs_parent": d.speedup_estimate,
-                    "fixed": [list(p) for p in d.fixed],
-                    "introduced": [list(p) for p in d.introduced],
-                    "accepted": accepted,
-                },
-            )
-            iter_name = it.path.name
         step = TuneStep(
             step=step_no,
             candidate=cand,
             profiled=pk,
             diff=d,
             accepted=accepted,
-            iteration=iter_name,
+            iteration="",
         )
         self.steps.append(step)
         self.say(
@@ -906,6 +981,28 @@ class _TuneLoop:
                 )
             self._cum_map.update(step_map)
             self.queue = self._generate()
+        if self.session is not None:
+            it = self.session.add_iteration(
+                [pk],
+                label=f"tune-{self.entry.name}-step{step_no}",
+                tuning={
+                    "family": self.entry.name,
+                    "step": step_no,
+                    "role": "candidate",
+                    "budget": self.budget,
+                    "seed": self.seed,
+                    "baseline": self.baseline_iter,
+                    "candidate": cand.provenance(),
+                    "verdict": d.verdict,
+                    "speedup_vs_parent": d.speedup_estimate,
+                    "fixed": [list(p) for p in d.fixed],
+                    "introduced": [list(p) for p in d.introduced],
+                    "accepted": accepted,
+                    "static_skipped": self._take_pending_skips(),
+                },
+            )
+            step = dataclasses.replace(step, iteration=it.path.name)
+            self.steps[-1] = step
         return step
 
     def result(self) -> TuneResult:
@@ -940,6 +1037,7 @@ class _TuneLoop:
             baseline_iteration=(
                 self.baseline_iter if self.session is not None else ""
             ),
+            static_skipped=tuple(self.static_skipped),
         )
 
 
@@ -951,6 +1049,7 @@ def tune(
     target_patterns: Optional[Sequence[str]] = None,
     seed: int = 0,
     use_generated: bool = True,
+    static_prescreen: bool = True,
     session: Optional[ProfileSession] = None,
     sampler: Optional[GridSampler] = None,
     collector: Optional[ShardedCollector] = None,
@@ -975,6 +1074,11 @@ def tune(
     :meth:`ProfileSession.profile`; ``cache`` (a
     :class:`~repro.core.cache.CollectionCache`) serves repeated
     candidates bit-identical cached heat maps instead of re-tracing.
+    ``static_prescreen`` (on by default) prices every generated
+    candidate with the linter's exact static transfer model and skips —
+    without tracing or spending budget — any candidate provably worse
+    than the incumbent best; skips are recorded in the tuning
+    provenance as ``static_skipped``.
     """
     loop = _TuneLoop(
         kernel,
@@ -982,6 +1086,7 @@ def tune(
         target_patterns=target_patterns,
         seed=seed,
         use_generated=use_generated,
+        static_prescreen=static_prescreen,
         session=session,
         sampler=sampler,
         progress=progress,
@@ -1072,6 +1177,7 @@ def tune_all(
     target_patterns: Optional[Sequence[str]] = None,
     seed: int = 0,
     use_generated: bool = True,
+    static_prescreen: bool = True,
     session: Optional[ProfileSession] = None,
     collector: Optional[ShardedCollector] = None,
     cache: Optional["CollectionCache"] = None,
@@ -1121,6 +1227,7 @@ def tune_all(
             target_patterns=target_patterns,
             seed=seed,
             use_generated=use_generated,
+            static_prescreen=static_prescreen,
             session=session,
             progress=family_progress(k),
         )
@@ -1237,8 +1344,10 @@ def trajectories_from_session(session: ProfileSession) -> List[dict]:
         best_tx = None
         best_label = "baseline"
         best_iter = run
+        static_skipped: List[dict] = []
         for meta, it in rows:
             pk = it.kernels[0]
+            static_skipped.extend(meta.get("static_skipped") or [])
             if meta.get("role") == "baseline":
                 baseline_tx = best_tx = pk.transactions
                 baseline_iter = best_iter = it.path.name
@@ -1257,6 +1366,7 @@ def trajectories_from_session(session: ProfileSession) -> List[dict]:
                     "fixed": meta.get("fixed", []),
                     "introduced": meta.get("introduced", []),
                     "accepted": bool(meta.get("accepted")),
+                    "static_skipped": meta.get("static_skipped") or [],
                 }
             )
             if meta.get("accepted"):
@@ -1290,6 +1400,7 @@ def trajectories_from_session(session: ProfileSession) -> List[dict]:
                 "speedup": baseline_tx / max(best_tx or 1, 1),
                 "improved": (best_tx or baseline_tx) < baseline_tx,
                 "steps": steps,
+                "static_skipped": static_skipped,
             }
         )
     out.sort(key=lambda r: (r["kernel"], r["run"]))

@@ -98,3 +98,85 @@ def test_scratch_regions_not_in_hbm_transactions():
     tx_all = hm.sector_transactions()
     tx_x = hm.sector_transactions("x")
     assert tx_all == tx_x  # scratch excluded from HBM transactions
+
+
+# -- batch index-map evaluation: vectorized calls are validated, not trusted --
+
+
+def test_batch_eval_catches_endpoint_agreeing_piecewise_map():
+    """Adversarial regression: a vectorized map that matches the scalar
+    evaluation at the batch's first and last program but lies in the
+    middle.  Endpoint-only validation (the old check) accepted the
+    vectorized result and miscollected every interior program; the
+    middle sample must force the scalar fallback."""
+    from repro.core.collector import _eval_index_map_batch
+
+    n = 8
+
+    def sneaky(i):
+        if isinstance(i, np.ndarray):
+            return (np.where((i == 0) | (i == n - 1), i, 0),)
+        return (int(i),)
+
+    pids = np.arange(n, dtype=np.int64).reshape(n, 1)
+    got = _eval_index_map_batch(sneaky, pids)
+    want = np.arange(n, dtype=np.int64).reshape(n, 1)
+    assert np.array_equal(got, want)
+
+
+def test_batch_eval_catches_arity_change():
+    """A vectorized call returning a different arity than the scalar
+    path must not be trusted either."""
+    from repro.core.collector import _eval_index_map_batch
+
+    def shapeshifter(i):
+        if isinstance(i, np.ndarray):
+            return (i, np.zeros_like(i))  # extra bogus component
+        return (int(i),)
+
+    pids = np.arange(6, dtype=np.int64).reshape(6, 1)
+    got = _eval_index_map_batch(shapeshifter, pids)
+    assert got.shape == (6, 1)
+    assert np.array_equal(got[:, 0], np.arange(6))
+
+
+def test_batch_eval_property_matches_scalar_rows():
+    """Property: for any index map — affine, piecewise, broadcasting or
+    not — the batch evaluation equals per-program scalar evaluation."""
+    hypothesis = __import__("pytest").importorskip("hypothesis")
+    st = __import__("pytest").importorskip("hypothesis.strategies")
+    given, settings = hypothesis.given, hypothesis.settings
+
+    @st.composite
+    def _maps(draw):
+        a = draw(st.integers(min_value=-3, max_value=3))
+        b = draw(st.integers(min_value=0, max_value=7))
+        pivot = draw(st.integers(min_value=0, max_value=12))
+        kind = draw(st.sampled_from(["affine", "piecewise", "modular"]))
+        if kind == "affine":
+            return lambda i: (a * i + b,)
+        if kind == "modular":
+            return lambda i: (i % (pivot + 1), b)
+        # piecewise: numpy-vectorizable via np.where, consistent with
+        # the scalar branch for every i
+        def pw(i):
+            if isinstance(i, np.ndarray):
+                return (np.where(i < pivot, i, a * i + b),)
+            return (i if i < pivot else a * i + b,)
+        return pw
+
+    @settings(max_examples=60, deadline=None)
+    @given(index_map=_maps(), p=st.integers(min_value=1, max_value=17))
+    def _property(index_map, p):
+        from repro.core.collector import _eval_index_map_batch
+
+        pids = np.arange(p, dtype=np.int64).reshape(p, 1)
+        got = _eval_index_map_batch(index_map, pids)
+        want = np.asarray(
+            [[int(x) for x in np.atleast_1d(index_map(int(i)))]
+             for i in range(p)],
+            dtype=np.int64,
+        ).reshape(p, -1)
+        assert np.array_equal(got, want)
+
+    _property()
