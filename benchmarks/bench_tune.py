@@ -46,8 +46,12 @@ from typing import List, Optional, Tuple
 
 #: Ladder families the unattended loop is expected to close.  (cuszp,
 #: flash, gmm and ssd have single-variant ladders — the tuner still
-#: runs on them, but they are not part of the acceptance bar.)
-FAMILIES = ("gemm", "spmv", "histogram", "gramschm", "ttm")
+#: runs on them, but they are not part of the acceptance bar.)  The
+#: serving-shaped families exercise decode/prefill scenarios: their
+#: data-dependent rungs win on strictly fewer transfers, then the
+#: generated candidates fix the residual hot patterns on top.
+FAMILIES = ("gemm", "spmv", "histogram", "gramschm", "ttm",
+            "ragged_flash", "paged_attn")
 
 #: Families the CI smoke subset tunes (small grids, < 1 s each).
 SMOKE_FAMILIES = ("gemm", "gramschm", "ttm")

@@ -12,6 +12,14 @@ Subcommands (see ``docs/cli.md`` for transcripts):
   ``--strict`` promotes warnings to failures.
 * ``cuthermo profile --kernel gemm --out sess/`` — profile one or more
   kernels into the next iteration of a session directory.
+* ``cuthermo model transformer-tiny --out sess/`` — whole-model
+  profiling: discover every Pallas kernel a registered model's forward
+  (and, with ``--backward``, backward) pass launches, profile them all
+  into ONE iteration with per-layer attribution (artifact v5), and run
+  the HLO-level sweep (collective heat + flop/byte cost) over the
+  compiled module.  ``--config KEY=VALUE`` overrides config fields;
+  ``--max-transfers N`` turns the iteration total into a CI budget
+  (exit 1 when blown); exit 2 on unknown models / bad overrides.
 * ``cuthermo report sess/iter0`` — rebuild the report bundle (HTML
   gallery + markdown digest + CSVs) for a stored iteration.
 * ``cuthermo diff sess/iter0 sess/iter1`` — align two iterations and
@@ -157,6 +165,97 @@ def _build_parser() -> argparse.ArgumentParser:
         help="suppress per-kernel text reports",
     )
     pr.set_defaults(func=_cmd_profile)
+
+    mo = sub.add_parser(
+        "model",
+        help="whole-model profiling: discover and profile every kernel "
+        "of a registered model into one per-layer-attributed iteration",
+    )
+    mo.add_argument(
+        "name",
+        nargs="?",
+        default=None,
+        metavar="NAME",
+        help="registered model (see `cuthermo model --list`): "
+        "transformer-tiny, moe-tiny, mamba-tiny",
+    )
+    mo.add_argument(
+        "--list",
+        action="store_true",
+        help="list registered models and exit",
+    )
+    mo.add_argument(
+        "--config",
+        "-c",
+        action="append",
+        default=[],
+        metavar="KEY=VALUE",
+        help="override a model config field (repeatable), e.g. "
+        "-c n_layers=4 -c d_ff=512; unknown keys exit 2",
+    )
+    mo.add_argument(
+        "--backward",
+        action="store_true",
+        help="also profile the backward-pass kernels (store-heavy "
+        "mirrors of each forward kernel) and sweep the grad HLO",
+    )
+    mo.add_argument(
+        "--workers",
+        "-w",
+        type=int,
+        default=1,
+        metavar="N",
+        help="shard collection across N worker processes (default: 1)",
+    )
+    mo.add_argument(
+        "--cache",
+        default=None,
+        metavar="DIR",
+        help="content-addressed collection cache directory: an "
+        "unchanged model re-profiles bit-identically without re-tracing",
+    )
+    mo.add_argument(
+        "--out",
+        "-o",
+        default="cuthermo-session",
+        metavar="DIR",
+        help="session directory (created on first use; default: "
+        "./cuthermo-session)",
+    )
+    mo.add_argument(
+        "--sampler",
+        default=None,
+        metavar="SPEC",
+        help="grid sampler override for every discovered kernel: "
+        "'full' or 'window:N' (default: full)",
+    )
+    mo.add_argument(
+        "--max-transfers",
+        type=int,
+        default=None,
+        metavar="N",
+        help="CI budget: exit 1 when the iteration's total tile "
+        "transfers exceed N",
+    )
+    mo.add_argument(
+        "--no-hlo",
+        action="store_true",
+        help="skip the HLO-level sweep (no model compile; per-layer "
+        "table only)",
+    )
+    mo.add_argument(
+        "--report",
+        action="store_true",
+        help="write the report bundle (with the per-layer section) to "
+        "<iteration>/report afterwards",
+    )
+    mo.add_argument("--label", default=None, help="iteration label")
+    mo.add_argument("--note", default="", help="free-form iteration note")
+    mo.add_argument(
+        "--quiet", "-q", action="store_true",
+        help="suppress the per-layer table",
+    )
+    mo.set_defaults(func=_cmd_model)
 
     rp = sub.add_parser(
         "report", help="write the report bundle for a stored iteration"
@@ -599,6 +698,102 @@ def _cmd_profile(args: argparse.Namespace) -> int:
     return 0
 
 
+def _cmd_model(args: argparse.Namespace) -> int:
+    """Handler for ``cuthermo model``.
+
+    Exit-code contract: 0 profiled (and under budget), 1 the
+    ``--max-transfers`` budget is blown, 2 usage or load error (unknown
+    model, bad ``--config`` override, unreadable session).
+    """
+    import os
+
+    from repro.core.model_profile import (
+        iteration_transactions,
+        profile_model,
+    )
+    from repro.core.session import SessionError
+
+    if args.list:
+        from repro.models.registry import MODELS
+
+        for name, entry in MODELS.items():
+            cfg = entry.config
+            print(
+                f"{name:<18} batch={entry.batch} seq={entry.seq} "
+                f"layers={cfg.n_layers} d_model={cfg.d_model}  "
+                f"{entry.summary}"
+            )
+        return 0
+    if not args.name:
+        print(
+            "cuthermo model: pass a model NAME (or --list)",
+            file=sys.stderr,
+        )
+        return 2
+    sampler = _parse_sampler(args.sampler)
+    try:
+        it = profile_model(
+            args.name,
+            args.out,
+            overrides=args.config,
+            backward=args.backward,
+            sampler=sampler,
+            workers=max(1, args.workers),
+            cache=args.cache,
+            label=args.label,
+            note=args.note,
+            hlo=not args.no_hlo,
+        )
+    except (KeyError, ValueError, SessionError) as e:
+        msg = e.args[0] if e.args else e
+        print(f"cuthermo: {msg}", file=sys.stderr)
+        return 2
+    total = iteration_transactions(it)
+    layers = it.layers or {}
+    if not args.quiet:
+        print(f"# model {args.name} (batch {layers.get('batch')}, "
+              f"seq {layers.get('seq')})"
+              + (" forward+backward" if args.backward else ""))
+        for row in layers.get("table", ()):
+            pats = ", ".join(
+                f"{p}@{r}" for _k, r, p in row.get("patterns", ())
+            )
+            print(
+                f"  {row['path']:<10} {', '.join(row['kinds']):<14} "
+                f"{row['transactions']:>8} transfers"
+                + (f"  [{pats}]" if pats else "")
+            )
+        print(f"  {'total':<10} {'':<14} {total:>8} transfers")
+        hlo = layers.get("hlo") or {}
+        if hlo:
+            cost = hlo.get("cost") or {}
+            heat = hlo.get("heat") or {}
+            print(
+                f"  hlo sweep: {cost.get('flops', 0):.3g} flops, "
+                f"{cost.get('bytes', 0):.3g} bytes, "
+                f"{heat.get('collective_count', 0)} collectives"
+            )
+    if args.report:
+        from repro.core.render import ReportEntry, write_report_bundle
+
+        written = write_report_bundle(
+            [ReportEntry.from_profiled(pk) for pk in it.kernels],
+            os.path.join(str(it.path), "report"),
+            title=f"cuthermo model report — {it.label}",
+            layers=layers or None,
+        )
+        print(f"wrote {written['index.html']}")
+    print(f"wrote {it.path} ({len(it.kernels)} kernels, {total} transfers)")
+    if args.max_transfers is not None and total > args.max_transfers:
+        print(
+            f"cuthermo: transfer budget blown: {total} > "
+            f"{args.max_transfers}",
+            file=sys.stderr,
+        )
+        return 1
+    return 0
+
+
 def _resolve_iteration_dir(path: str):
     """Accept an iteration dir, or a session dir (use its last iteration)."""
     import os
@@ -697,7 +892,7 @@ def _cmd_report(args: argparse.Namespace) -> int:
         )
     written = write_report_bundle(
         entries, out, title=title, tuning=tuning, check=check,
-        lint=lint or None,
+        lint=lint or None, layers=it.layers,
     )
     print(f"wrote {written['index.html']}")
     print(f"wrote {written['report.md']}")

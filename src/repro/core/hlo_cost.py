@@ -206,6 +206,15 @@ class Cost:
         for op, b in other.by_collective.items():
             self.by_collective[op] += b
 
+    def as_dict(self) -> Dict[str, float]:
+        """JSON-ready summary (the v5 manifest's ``layers.hlo.cost``)."""
+        return {
+            "flops": self.flops,
+            "bytes": self.bytes,
+            "wire_bytes": self.wire_bytes,
+            "by_collective": dict(self.by_collective),
+        }
+
 
 # ops with negligible byte traffic (bookkeeping; while bodies account
 # their own traffic — the while op's carried-tuple operands are not reads)

@@ -148,6 +148,15 @@ class HloHeat:
         """Distinct-device 'temperature' per collective (group sizes)."""
         return {c.name: c.group_size for c in self.collectives}
 
+    def as_dict(self) -> Dict[str, object]:
+        """JSON-ready summary (the v5 manifest's ``layers.hlo.heat``)."""
+        return {
+            "collective_count": self.collective_count,
+            "collective_bytes": self.collective_bytes,
+            "bytes_by_op": self.bytes_by_op(),
+            "redundant": [[name, int(n)] for name, n in self.redundant],
+        }
+
 
 def analyze_hlo(hlo_text: str) -> HloHeat:
     """Walk an HLO module's text and accumulate collective heat."""

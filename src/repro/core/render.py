@@ -624,6 +624,120 @@ def _lint_section_markdown(lint: Sequence[Mapping]) -> List[str]:
     return lines
 
 
+def _layers_section_html(layers: Mapping) -> str:
+    """Per-layer attribution section of the HTML bundle (artifact v5).
+
+    ``layers`` is the iteration manifest's ``layers`` mapping written by
+    whole-model profiling: the per-layer rollup table (an exact
+    partition of the iteration's kernels, validated on write) plus the
+    HLO sweep summary.
+    """
+    if not layers:
+        return ""
+    model = str(layers.get("model", ""))
+    parts = [
+        "<h3>per-layer attribution</h3>",
+        f"<div class='card'><p>model <b>{_html.escape(model)}</b> "
+        f"(batch {layers.get('batch')}, seq {layers.get('seq')})"
+        + (
+            " &middot; overrides: "
+            + _html.escape(", ".join(map(str, layers.get("overrides"))))
+            if layers.get("overrides")
+            else ""
+        )
+        + "</p>",
+        "<table><tr><th>layer</th><th>kinds</th><th>kernels</th>"
+        "<th>tile transfers</th><th>patterns</th></tr>",
+    ]
+    table = layers.get("table") or ()
+    total = sum(int(row.get("transactions", 0)) for row in table)
+    for row in table:
+        pats = (
+            ", ".join(
+                f"{_html.escape(str(p))} on {_html.escape(str(r))}"
+                for _k, r, p in row.get("patterns", ())
+            )
+            or "&mdash;"
+        )
+        parts.append(
+            f"<tr><td>{_html.escape(str(row.get('path')))}</td>"
+            f"<td>{_html.escape(', '.join(row.get('kinds', ())))}</td>"
+            f"<td>{_html.escape(', '.join(row.get('kernels', ())))}</td>"
+            f"<td>{row.get('transactions')}</td><td>{pats}</td></tr>"
+        )
+    parts.append(
+        f"<tr><td><b>total</b></td><td></td><td></td>"
+        f"<td><b>{total}</b></td><td></td></tr></table>"
+    )
+    hlo = layers.get("hlo") or {}
+    if hlo:
+        cost = hlo.get("cost") or {}
+        heat = hlo.get("heat") or {}
+        parts.append(
+            "<p class='evidence'>HLO sweep"
+            + (" (forward+backward)" if hlo.get("backward") else " (forward)")
+            + f": {cost.get('flops', 0):.3g} flops, "
+            f"{cost.get('bytes', 0):.3g} bytes, "
+            f"{cost.get('wire_bytes', 0):.3g} wire bytes, "
+            f"{heat.get('collective_count', 0)} collectives"
+            + (
+                f", {len(heat.get('redundant') or ())} redundant"
+                if heat.get("redundant")
+                else ""
+            )
+            + "</p>"
+        )
+    parts.append("</div>")
+    return "".join(parts)
+
+
+def _layers_section_markdown(layers: Mapping) -> List[str]:
+    """Markdown lines of the per-layer attribution section."""
+    if not layers:
+        return []
+    lines = [
+        "",
+        f"## per-layer attribution — {layers.get('model', '')}",
+        "",
+        f"batch {layers.get('batch')}, seq {layers.get('seq')}"
+        + (
+            f", overrides: {', '.join(map(str, layers.get('overrides')))}"
+            if layers.get("overrides")
+            else ""
+        ),
+        "",
+        "| layer | kinds | kernels | tile transfers | patterns |",
+        "|---|---|---|---:|---|",
+    ]
+    table = layers.get("table") or ()
+    total = sum(int(row.get("transactions", 0)) for row in table)
+    for row in table:
+        pats = (
+            ", ".join(f"{p} on {r}" for _k, r, p in row.get("patterns", ()))
+            or "-"
+        )
+        lines.append(
+            f"| {row.get('path')} | {', '.join(row.get('kinds', ()))} "
+            f"| {', '.join(row.get('kernels', ()))} "
+            f"| {row.get('transactions')} | {pats} |"
+        )
+    lines.append(f"| **total** | | | {total} | |")
+    hlo = layers.get("hlo") or {}
+    if hlo:
+        cost = hlo.get("cost") or {}
+        heat = hlo.get("heat") or {}
+        lines += [
+            "",
+            "HLO sweep"
+            + (" (forward+backward)" if hlo.get("backward") else " (forward)")
+            + f": {cost.get('flops', 0):.3g} flops, "
+            f"{cost.get('bytes', 0):.3g} bytes, "
+            f"{cost.get('wire_bytes', 0):.3g} wire bytes, "
+            f"{heat.get('collective_count', 0)} collectives",
+        ]
+    return lines
+
+
 def render_session_html(
     entries: Sequence[ReportEntry],
     title: str = "cuthermo report",
@@ -631,6 +745,7 @@ def render_session_html(
     tuning: Optional[Sequence[Mapping]] = None,
     check: Optional[Mapping] = None,
     lint: Optional[Sequence[Mapping]] = None,
+    layers: Optional[Mapping] = None,
 ) -> str:
     """Self-contained HTML gallery for one profiled iteration.
 
@@ -676,6 +791,8 @@ def render_session_html(
             "bar sits on the achievable memory-roofline floor.</p>"
         )
         parts.append(chart)
+    if layers:
+        parts.append(_layers_section_html(layers))
     if check:
         parts.append(_check_section_html(check))
     if lint:
@@ -779,6 +896,7 @@ def render_session_markdown(
     tuning: Optional[Sequence[Mapping]] = None,
     check: Optional[Mapping] = None,
     lint: Optional[Sequence[Mapping]] = None,
+    layers: Optional[Mapping] = None,
 ) -> str:
     """Markdown digest of one iteration (the commit-message artifact)."""
     lines = [f"# {title}", ""]
@@ -828,6 +946,8 @@ def render_session_markdown(
                 f"save ~{100 * a.est_transaction_saving:.0f}% — "
                 f"{a.description}"
             )
+    if layers:
+        lines += _layers_section_markdown(layers)
     if check:
         lines += _check_section_markdown(check)
     if lint:
@@ -845,6 +965,7 @@ def write_report_bundle(
     tuning: Optional[Sequence[Mapping]] = None,
     check: Optional[Mapping] = None,
     lint: Optional[Sequence[Mapping]] = None,
+    layers: Optional[Mapping] = None,
 ) -> Dict[str, str]:
     """Write a whole-iteration report bundle into ``out_dir``.
 
@@ -854,7 +975,9 @@ def write_report_bundle(
     ``render_session_html``) adds the tuning-trajectory section to both
     digests; ``check`` (a ``cuthermo check`` report document) adds the
     regression-gate verdict; ``lint`` (per-kernel predicted-vs-observed
-    dicts, see ``_lint_section_html``) adds the static-lint cross-tab.
+    dicts, see ``_lint_section_html``) adds the static-lint cross-tab;
+    ``layers`` (an artifact-v5 per-layer attribution mapping, see
+    ``cuthermo model``) adds the per-layer rollup table.
     Returns a name->path mapping of everything written.
     """
     os.makedirs(out_dir, exist_ok=True)
@@ -863,7 +986,8 @@ def write_report_bundle(
     with open(index, "w") as f:
         f.write(
             render_session_html(
-                entries, title=title, tuning=tuning, check=check, lint=lint
+                entries, title=title, tuning=tuning, check=check,
+                lint=lint, layers=layers,
             )
         )
     written["index.html"] = index
@@ -871,7 +995,8 @@ def write_report_bundle(
     with open(md, "w") as f:
         f.write(
             render_session_markdown(
-                entries, title=title, tuning=tuning, check=check, lint=lint
+                entries, title=title, tuning=tuning, check=check,
+                lint=lint, layers=layers,
             )
         )
     written["report.md"] = md

@@ -22,7 +22,7 @@ first-class, on-disk object:
 Layout on disk (see ``docs/file-format.md``)::
 
     sess/
-      session.json          # {"format": "cuthermo-session", "version": 4,
+      session.json          # {"format": "cuthermo-session", "version": 5,
                             #  "iterations": ["iter0", "iter1"]}
       iter0/
         manifest.json       # version stamp + per-kernel metadata
@@ -74,13 +74,25 @@ from .trace import GridSampler, RegionInfo, ShardInfo
 #:     points; recomputed from the arrays by full loads).  The v1/v2/v3
 #:     load paths are pinned by the golden fixtures under
 #:     ``tests/fixtures/``.
-ARTIFACT_VERSION = 4
+#: v5  (whole-model profiling) adds an optional top-level "layers"
+#:     mapping to the iteration manifest: per-layer attribution of the
+#:     iteration's kernels ({"model": name, "table": [{"path",
+#:     "kernels", "transactions", ...}], "hlo": {...}}), written by
+#:     ``cuthermo model`` / ``repro.core.model_profile``.  The table is
+#:     validated on write as an exact partition — every kernel in
+#:     exactly one row, each row's transactions equal to the sum over
+#:     its member kernels — so per-layer totals always sum to the
+#:     iteration total by construction.  Backward compatible on read:
+#:     v1-v4 artifacts load with ``Iteration.layers`` = None (layer
+#:     attribution absent, not an error).
+ARTIFACT_VERSION = 5
 
 #: Versions this build can load.  v1 lacks shard provenance, v2 lacks
-#: tuning provenance, v3 lacks the scratch_words manifest metric; all
-#: are otherwise identical and load with the missing fields empty.
-#: Writers always stamp ARTIFACT_VERSION.
-SUPPORTED_VERSIONS = (1, 2, 3, 4)
+#: tuning provenance, v3 lacks the scratch_words manifest metric, v4
+#: lacks per-layer attribution; all are otherwise identical and load
+#: with the missing fields empty.  Writers always stamp
+#: ARTIFACT_VERSION.
+SUPPORTED_VERSIONS = (1, 2, 3, 4, 5)
 
 SESSION_FORMAT = "cuthermo-session"
 ITERATION_FORMAT = "cuthermo-iteration"
@@ -327,6 +339,9 @@ class Iteration:
     # and which advisor Action spawned the candidate (None when the
     # iteration was not written by the tuner)
     tuning: Optional[Mapping] = None
+    # v5 per-layer attribution (None when the iteration was not written
+    # by whole-model profiling, and for every pre-v5 artifact)
+    layers: Optional[Mapping] = None
 
     def kernel(self, name: str) -> ProfiledKernel:
         """Look up one profiled kernel by manifest name."""
@@ -492,12 +507,70 @@ def _check_version(manifest: Mapping, path: Path) -> None:
         )
 
 
+def _validate_layers(
+    layers: Mapping, kernels: Sequence[ProfiledKernel]
+) -> None:
+    """Validate v5 per-layer attribution against the iteration's kernels.
+
+    The layer table must be an exact partition: every profiled kernel
+    appears in exactly one row, every row references only profiled
+    kernels, and each row's ``transactions`` equals the sum over its
+    members — which makes "per-layer totals sum to the iteration total"
+    an invariant of the artifact, not a property a reader must check.
+    """
+    table = layers.get("table")
+    if not isinstance(table, (list, tuple)):
+        raise SessionError(
+            "layers attribution needs a 'table' list of rows"
+        )
+    tx_by_name = {pk.name: pk.transactions for pk in kernels}
+    seen: Dict[str, str] = {}
+    for row in table:
+        try:
+            path_ = str(row["path"])
+            members = list(row["kernels"])
+            row_tx = int(row["transactions"])
+        except (KeyError, TypeError, ValueError) as e:
+            raise SessionError(
+                f"malformed layer row ({e!r}); every row needs 'path', "
+                "'kernels' and 'transactions'"
+            ) from e
+        total = 0
+        for name in members:
+            if name not in tx_by_name:
+                raise SessionError(
+                    f"layer {path_!r} references kernel {name!r} not "
+                    "profiled in this iteration"
+                )
+            if name in seen:
+                raise SessionError(
+                    f"kernel {name!r} attributed to both layer "
+                    f"{seen[name]!r} and {path_!r}; the layer table must "
+                    "partition the iteration's kernels"
+                )
+            seen[name] = path_
+            total += tx_by_name[name]
+        if total != row_tx:
+            raise SessionError(
+                f"layer {path_!r} claims {row_tx} transactions but its "
+                f"kernels sum to {total}"
+            )
+    missing = sorted(set(tx_by_name) - set(seen))
+    if missing:
+        raise SessionError(
+            f"kernel(s) {missing} profiled but missing from the layer "
+            "table; the layer table must partition the iteration's kernels"
+        )
+
+
 def write_iteration(
     path: Union[str, Path],
     kernels: Sequence[ProfiledKernel],
     label: Optional[str] = None,
     note: str = "",
     tuning: Optional[Mapping] = None,
+    *,
+    layers: Optional[Mapping] = None,
 ) -> Path:
     """Persist one iteration (manifest.json + one npz per kernel).
 
@@ -512,9 +585,14 @@ def write_iteration(
 
     ``tuning`` is the optional v3 autotuner provenance mapping (must be
     JSON-serializable; see ``repro.core.tuner`` for the shape) stored
-    verbatim under the manifest's ``tuning`` key.
+    verbatim under the manifest's ``tuning`` key.  ``layers`` is the
+    optional v5 per-layer attribution mapping; its table is validated
+    as an exact partition of ``kernels`` (see :func:`_validate_layers`)
+    and stored under the manifest's ``layers`` key.
     """
     path = Path(path)
+    if layers is not None:
+        _validate_layers(layers, kernels)
     names_seen = [pk.name for pk in kernels]
     dupes = sorted({n for n in names_seen if names_seen.count(n) > 1})
     if dupes:
@@ -562,6 +640,8 @@ def write_iteration(
     }
     if tuning is not None:
         manifest["tuning"] = dict(tuning)
+    if layers is not None:
+        manifest["layers"] = dict(layers)
     with open(path / "manifest.json", "w") as f:
         json.dump(manifest, f, indent=2)
     return path
@@ -643,6 +723,8 @@ def load_iteration(path: Union[str, Path]) -> Iteration:
         note=manifest.get("note", ""),
         # v1/v2 manifests carry no tuning key: loads as a plain iteration
         tuning=manifest.get("tuning"),
+        # pre-v5 manifests carry no layers key: attribution absent
+        layers=manifest.get("layers"),
     )
 
 
@@ -922,14 +1004,17 @@ class ProfileSession:
         label: Optional[str] = None,
         note: str = "",
         tuning: Optional[Mapping] = None,
+        *,
+        layers: Optional[Mapping] = None,
     ) -> Iteration:
         """Persist already-profiled kernels as the next ``iterN`` directory.
 
         The directory is claimed with an *exclusive* mkdir, so two
         processes profiling into the same session race to distinct
         ``iterN`` numbers instead of silently overwriting each other.
-        ``tuning`` is stored as the iteration's autotuner provenance
-        (see :func:`write_iteration`).
+        ``tuning`` is stored as the iteration's autotuner provenance and
+        ``layers`` as its v5 per-layer attribution (validated; see
+        :func:`write_iteration`).
         """
         existing = self.iteration_names()
         nums = [int(_ITER_RE.match(n).group(1)) for n in existing
@@ -944,7 +1029,7 @@ class ProfileSession:
                 n += 1  # another writer claimed it; take the next slot
         path = write_iteration(
             self.root / name, kernels, label=label or name, note=note,
-            tuning=tuning,
+            tuning=tuning, layers=layers,
         )
         if name not in existing:
             existing.append(name)

@@ -31,7 +31,10 @@ import numpy as np
 from repro.core.collector import KernelSpec
 from repro.core.trace import GridSampler
 
-from . import flash, gemm, gmm, gramschm, histogram, ops, ref, spmv, ssd, ttm
+from . import (
+    flash, gemm, gmm, gramschm, histogram, ops, paged_attn, ragged_flash,
+    ref, spmv, ssd, ttm,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -282,6 +285,74 @@ REGISTRY: Dict[str, RegistryEntry] = {
             ),
             sampler=_full,
         ),
+        RegistryEntry(
+            name="ragged_flash",
+            summary="serving ragged flash attention: dense decode/prefill "
+            "sweeps vs the EasyDeL-style block-skip over [starts, ends)",
+            variants=(
+                KernelVariant(
+                    "decode",
+                    lambda: ragged_flash.ragged_decode_spec(),
+                    context=ragged_flash.ragged_context,
+                    note="dense decode sweep: every KV block, every row",
+                ),
+                KernelVariant(
+                    "decode-ragged",
+                    lambda: ragged_flash.ragged_decode_ragged_spec(),
+                    context=ragged_flash.ragged_context,
+                    role="optimized",
+                    note="scalar-prefetched bounds skip dead KV blocks",
+                ),
+                KernelVariant(
+                    "prefill",
+                    lambda: ragged_flash.ragged_prefill_spec(),
+                    context=ragged_flash.ragged_context,
+                    note="dense causal prefill sweep",
+                ),
+                KernelVariant(
+                    "prefill-ragged",
+                    lambda: ragged_flash.ragged_prefill_ragged_spec(),
+                    context=ragged_flash.ragged_context,
+                    role="optimized",
+                    note="causal + ragged clamp on the KV walk",
+                ),
+            ),
+            sampler=_full,
+        ),
+        RegistryEntry(
+            name="paged_attn",
+            summary="serving paged KV-cache attention: contiguous cache "
+            "sweep vs the vLLM-style block-table page gather",
+            variants=(
+                KernelVariant(
+                    "decode",
+                    lambda: paged_attn.paged_decode_spec(),
+                    context=paged_attn.paged_context,
+                    note="contiguous per-row cache, dense slot sweep",
+                ),
+                KernelVariant(
+                    "decode-paged",
+                    lambda: paged_attn.paged_decode_paged_spec(),
+                    context=paged_attn.paged_context,
+                    role="optimized",
+                    note="block-table gather, clamped to context_lens",
+                ),
+                KernelVariant(
+                    "prefill",
+                    lambda: paged_attn.paged_prefill_spec(),
+                    context=paged_attn.paged_context,
+                    note="dense causal sweep over the contiguous cache",
+                ),
+                KernelVariant(
+                    "prefill-paged",
+                    lambda: paged_attn.paged_prefill_paged_spec(),
+                    context=paged_attn.paged_context,
+                    role="optimized",
+                    note="page gather + causal clamp",
+                ),
+            ),
+            sampler=_full,
+        ),
     )
 }
 
@@ -292,7 +363,20 @@ def names() -> Tuple[str, ...]:
 
 
 def get(name: str) -> RegistryEntry:
-    """Look up a registry entry; raises KeyError with the known names."""
+    """Look up a registry entry; raises KeyError with the known names.
+
+    Families named ``model.<model>.<kind>`` are *model-derived*: they
+    are synthesized on demand by ``repro.models.registry.kernel_entry``
+    from a model's layer layout, so everything that consumes a registry
+    entry — ``cuthermo profile/lint/tune/check`` and ``ShardedCollector``
+    workers rebuilding specs from source stamps — works on them without
+    the static REGISTRY (or ``names()``, and hence ``tune --all``'s
+    default scope) ever listing them.
+    """
+    if name.startswith("model."):
+        from repro.models import registry as model_registry
+
+        return model_registry.kernel_entry(name)
     try:
         return REGISTRY[name]
     except KeyError:
@@ -333,5 +417,5 @@ __all__ = [
     "RegistryEntry",
     "build",
     "flash", "gemm", "get", "gmm", "gramschm", "histogram", "names", "ops",
-    "ref", "resolve", "spmv", "ssd", "ttm",
+    "paged_attn", "ragged_flash", "ref", "resolve", "spmv", "ssd", "ttm",
 ]

@@ -1,6 +1,17 @@
 """repro.models — composable model definitions for all assigned archs."""
 
-from . import attention, encdec, frontends, layers, mamba, model, moe, params, transformer
+from . import (
+    attention,
+    encdec,
+    frontends,
+    layers,
+    mamba,
+    model,
+    moe,
+    params,
+    registry,
+    transformer,
+)
 from .model import LM, ModelConfig, build_model
 
 __all__ = [
@@ -15,5 +26,6 @@ __all__ = [
     "model",
     "moe",
     "params",
+    "registry",
     "transformer",
 ]

@@ -1,7 +1,7 @@
 """Deterministic generator for the committed artifact-format fixtures.
 
-The golden artifacts under ``tests/fixtures/artifact-v{1,2,3}`` pin the
-v1/v2/v3 *load paths*: back-compat is guaranteed by files an old writer
+The golden artifacts under ``tests/fixtures/artifact-v{1..5}`` pin the
+v1–v5 *load paths*: back-compat is guaranteed by files an old writer
 could have produced, not just by code that rewrites today's format.
 Each fixture is a tiny hand-built heat map (no kernel tracing, no jax)
 written with the current writer and then rewritten to the target
@@ -11,6 +11,8 @@ emitted:
 * v1 — no shard provenance, no tuning, no scratch_words metric
 * v2 — shard provenance, no tuning, no scratch_words
 * v3 — shard provenance + tuning provenance, no scratch_words
+* v4 — v3 + the scratch_words metric, no layers attribution
+* v5 — v4 + per-layer attribution (the ``layers`` manifest block)
 
 Regenerate with ``python tests/fixtures/generate.py`` (from the repo
 root, with ``src`` on PYTHONPATH); ``test_artifact_compat.py`` also
@@ -32,7 +34,7 @@ from repro.core.trace import RegionInfo, ShardInfo
 
 FIXTURES = Path(__file__).parent
 
-#: The tuning provenance stored in the v3 fixture (shape from
+#: The tuning provenance stored in the v3+ fixtures (shape from
 #: repro.core.tuner).
 V3_TUNING = {
     "family": "golden",
@@ -41,6 +43,40 @@ V3_TUNING = {
     "role": "candidate",
     "candidate": {"label": "ladder:v01", "source": "ladder"},
     "accepted": True,
+}
+
+#: The per-layer attribution stored in the v5 fixture (shape from
+#: ``cuthermo model``; must satisfy ``session._validate_layers``: the
+#: single row claims the single kernel's 6 transactions).
+V5_LAYERS = {
+    "model": "golden-tiny",
+    "batch": 1,
+    "seq": 8,
+    "overrides": [],
+    "table": [
+        {
+            "path": "layer0",
+            "kinds": ["gemm"],
+            "kernels": ["golden"],
+            "transactions": 6,
+            "patterns": [["golden", "x", "hot"]],
+        }
+    ],
+    "hlo": {
+        "backward": False,
+        "heat": {
+            "collective_count": 0,
+            "collective_bytes": 0.0,
+            "bytes_by_op": {},
+            "redundant": [],
+        },
+        "cost": {
+            "flops": 64.0,
+            "bytes": 512.0,
+            "wire_bytes": 0.0,
+            "by_collective": {},
+        },
+    },
 }
 
 #: Word temperatures of the fixture's HBM region: three sectors, eight
@@ -107,18 +143,21 @@ def _rewrite_manifest(path, version, keep_tuning):
     manifest["created"] = 0.0  # determinism: fixtures carry no wallclock
     if not keep_tuning:
         manifest.pop("tuning", None)
+    if version < 5:
+        manifest.pop("layers", None)  # v5-only attribution block
     for entry in manifest["kernels"]:
-        entry.pop("scratch_words", None)  # v4-only metric
+        if version < 4:
+            entry.pop("scratch_words", None)  # v4+ metric
         if version < 2:
             entry["heatmap"].pop("shards", None)
     mpath.write_text(json.dumps(manifest, indent=2) + "\n")
 
 
 def write_fixtures(dest):
-    """Write artifact-v1/-v2/-v3 under ``dest``; returns the three paths."""
+    """Write artifact-v1 … artifact-v5 under ``dest``; returns the paths."""
     dest = Path(dest)
     out = []
-    for version in (1, 2, 3):
+    for version in (1, 2, 3, 4, 5):
         pk = ProfiledKernel(
             name="golden",
             variant="v00",
@@ -135,6 +174,7 @@ def write_fixtures(dest):
             label=f"golden-v{version}",
             note="format-compat fixture",
             tuning=V3_TUNING if version >= 3 else None,
+            layers=V5_LAYERS if version >= 5 else None,
         )
         _rewrite_manifest(path, version, keep_tuning=version >= 3)
         out.append(path)

@@ -1,4 +1,4 @@
-"""Artifact back-compat pinned by committed v1/v2/v3 golden fixtures.
+"""Artifact back-compat pinned by committed v1–v5 golden fixtures.
 
 The fixtures under ``tests/fixtures/artifact-v*`` are files an OLD
 writer could have produced (see ``tests/fixtures/generate.py``).  These
@@ -38,13 +38,13 @@ def _load_generator():
 def test_every_supported_version_has_a_fixture():
     # the current version is exercised by the live writer; every OLD
     # version must be pinned by a committed artifact
-    assert SUPPORTED_VERSIONS == (1, 2, 3, 4)
-    assert ARTIFACT_VERSION == 4
-    for version in SUPPORTED_VERSIONS[:-1]:
+    assert SUPPORTED_VERSIONS == (1, 2, 3, 4, 5)
+    assert ARTIFACT_VERSION == 5
+    for version in SUPPORTED_VERSIONS:
         assert (FIXTURES / f"artifact-v{version}" / "manifest.json").is_file()
 
 
-@pytest.mark.parametrize("version", [1, 2, 3])
+@pytest.mark.parametrize("version", [1, 2, 3, 4, 5])
 def test_fixture_loads_with_pinned_contents(version):
     it = load_iteration(FIXTURES / f"artifact-v{version}")
     assert it.label == f"golden-v{version}"
@@ -90,6 +90,28 @@ def test_v3_fixture_carries_tuning_provenance():
     assert it.tuning["candidate"]["label"] == "ladder:v01"
 
 
+@pytest.mark.parametrize("version", [1, 2, 3, 4])
+def test_pre_v5_fixtures_have_no_layers(version):
+    # loaders must surface layers=None for artifacts written before the
+    # per-layer attribution block existed — never a fabricated table
+    it = load_iteration(FIXTURES / f"artifact-v{version}")
+    assert it.layers is None
+
+
+def test_v5_fixture_carries_layer_attribution():
+    it = load_iteration(FIXTURES / "artifact-v5")
+    assert it.layers is not None
+    assert it.layers["model"] == "golden-tiny"
+    table = it.layers["table"]
+    assert [row["path"] for row in table] == ["layer0"]
+    # the partition invariant: per-layer totals sum to the iteration total
+    rollup = sum(row["transactions"] for row in table)
+    assert rollup == sum(pk.transactions for pk in it.kernels) == 6
+    # the HLO sweep block survives the round trip
+    assert it.layers["hlo"]["cost"]["flops"] == 64.0
+    assert it.layers["hlo"]["heat"]["collective_count"] == 0
+
+
 def test_old_manifests_yield_history_points_without_scratch():
     # manifest-only history consumers must see scratch_words=None on
     # pre-v4 artifacts (skip the metric), never a fabricated zero
@@ -105,6 +127,13 @@ def test_old_manifests_yield_history_points_without_scratch():
         assert pt.scratch_words is None
     # v3 tuning provenance flows into the point
     assert pt.tuning_role == "candidate" and pt.tuning_accepted is True
+    # v4+ manifests DO carry the stored metric
+    for version in (4, 5):
+        manifest = json.loads(
+            (FIXTURES / f"artifact-v{version}" / "manifest.json").read_text()
+        )
+        (pt,) = _history_points_from_manifest(manifest, f"artifact-v{version}")
+        assert pt.scratch_words == 32
 
 
 def test_unknown_version_still_fails(tmp_path):
@@ -126,13 +155,14 @@ def test_fixtures_match_generator(tmp_path):
     """
     gen = _load_generator()
     gen.write_fixtures(tmp_path)
-    for version in (1, 2, 3):
+    for version in (1, 2, 3, 4, 5):
         fresh = load_iteration(tmp_path / f"artifact-v{version}")
         committed = load_iteration(FIXTURES / f"artifact-v{version}")
         assert heatmaps_equal(fresh.kernels[0].heatmap,
                               committed.kernels[0].heatmap)
         assert fresh.label == committed.label
         assert fresh.tuning == committed.tuning
+        assert fresh.layers == committed.layers
         assert fresh.kernels[0].shards == committed.kernels[0].shards
         # manifests agree byte-for-byte (created is pinned to 0.0)
         fresh_m = (tmp_path / f"artifact-v{version}" /

@@ -34,12 +34,13 @@ def test_help_subprocess():
     proc = _run_cli("--help")
     assert proc.returncode == 0
     out = proc.stdout
-    for sub in ("profile", "report", "diff", "check", "kernels", "tune"):
+    for sub in ("profile", "model", "report", "diff", "check", "kernels",
+                "tune"):
         assert sub in out
 
 
-@pytest.mark.parametrize("sub", ["profile", "report", "diff", "check",
-                                 "kernels", "tune"])
+@pytest.mark.parametrize("sub", ["profile", "model", "report", "diff",
+                                 "check", "kernels", "tune"])
 def test_subcommand_help_subprocess(sub):
     proc = _run_cli(sub, "--help")
     assert proc.returncode == 0

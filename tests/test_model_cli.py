@@ -1,0 +1,175 @@
+"""``cuthermo model`` end to end: subprocess exit contract + artifacts.
+
+The whole-model subcommand is CI surface (the model-smoke job drives
+it), so its 0/1/2 exit-code contract is pinned via subprocess like the
+other gates: 0 profiled (and under budget), 1 the ``--max-transfers``
+budget is blown, 2 unknown model / bad override.  The stored artifact
+must be a v5 iteration whose per-layer rollup sums to the iteration
+total and round-trips bit-identically; ``--report`` must render the
+per-layer table.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run_cli(*args):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (
+        os.path.abspath(REPO_SRC)
+        + os.pathsep
+        + env.get("PYTHONPATH", "")
+    )
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.cli", *args],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=600,
+    )
+
+
+@pytest.fixture(scope="module")
+def model_session(tmp_path_factory):
+    """One profiled mamba-tiny session (cheapest registered model)."""
+    sess = str(tmp_path_factory.mktemp("model") / "sess")
+    proc = _run_cli(
+        "model", "mamba-tiny", "--out", sess, "--no-hlo", "--report"
+    )
+    assert proc.returncode == 0, proc.stderr
+    return sess, proc
+
+
+def test_model_help_and_list():
+    proc = _run_cli("model", "--help")
+    assert proc.returncode == 0
+    assert "--max-transfers" in proc.stdout
+    proc = _run_cli("model", "--list")
+    assert proc.returncode == 0
+    for name in ("transformer-tiny", "moe-tiny", "mamba-tiny"):
+        assert name in proc.stdout
+
+
+def test_model_exit_0_prints_per_layer_table(model_session):
+    sess, proc = model_session
+    out = proc.stdout
+    assert "# model mamba-tiny" in out
+    for path in ("layer0", "layer1", "head", "total"):
+        assert path in out
+    assert os.path.isdir(os.path.join(sess, "iter0"))
+
+
+def test_model_exit_2_on_unknown_model(tmp_path):
+    proc = _run_cli("model", "no-such-model", "--out", str(tmp_path / "s"))
+    assert proc.returncode == 2
+    assert "unknown model" in proc.stderr
+
+
+def test_model_exit_2_on_bad_override(tmp_path):
+    proc = _run_cli(
+        "model", "mamba-tiny", "-c", "bogus=1",
+        "--out", str(tmp_path / "s"),
+    )
+    assert proc.returncode == 2
+    assert "unknown config field" in proc.stderr
+    proc = _run_cli(
+        "model", "mamba-tiny", "-c", "n_layers", "--out", str(tmp_path / "s")
+    )
+    assert proc.returncode == 2
+    assert "key=value" in proc.stderr
+
+
+def test_model_exit_2_without_a_name():
+    proc = _run_cli("model")
+    assert proc.returncode == 2
+
+
+def test_model_exit_1_when_budget_blown(tmp_path):
+    # --max-transfers 0 is deterministic: any profile blows it, and the
+    # artifact is still written before the gate fires
+    sess = str(tmp_path / "s")
+    proc = _run_cli(
+        "model", "mamba-tiny", "--out", sess, "--no-hlo", "-q",
+        "--max-transfers", "0",
+    )
+    assert proc.returncode == 1
+    assert "budget blown" in proc.stderr
+    assert os.path.isdir(os.path.join(sess, "iter0"))
+
+
+def test_model_artifact_is_v5_with_exact_rollup(model_session):
+    sess, _ = model_session
+    manifest = json.loads(
+        open(os.path.join(sess, "iter0", "manifest.json")).read()
+    )
+    assert manifest["version"] == 5
+    layers = manifest["layers"]
+    assert layers["model"] == "mamba-tiny"
+    rollup = sum(row["transactions"] for row in layers["table"])
+    # acceptance criterion: per-layer totals sum EXACTLY to the total
+    sys.path.insert(0, os.path.abspath(REPO_SRC))
+    from repro.core.model_profile import iteration_transactions
+    from repro.core.session import load_iteration
+
+    it = load_iteration(os.path.join(sess, "iter0"))
+    assert it.layers == layers
+    assert rollup == iteration_transactions(it)
+    # every kernel carries its model-family variant stamp
+    assert all(pk.variant.startswith("model.mamba-tiny.")
+               for pk in it.kernels)
+
+
+def test_model_artifact_round_trips_bit_identically(model_session, tmp_path):
+    sess, _ = model_session
+    sys.path.insert(0, os.path.abspath(REPO_SRC))
+    from repro.core.session import (
+        heatmaps_equal,
+        load_iteration,
+        write_iteration,
+    )
+
+    it = load_iteration(os.path.join(sess, "iter0"))
+    copy = tmp_path / "copy"
+    write_iteration(copy, it.kernels, label=it.label, note=it.note,
+                    layers=it.layers)
+    again = load_iteration(copy)
+    assert again.layers == it.layers
+    for a, b in zip(it.kernels, again.kernels):
+        assert heatmaps_equal(a.heatmap, b.heatmap)
+
+
+def test_model_report_renders_per_layer_section(model_session):
+    sess, _ = model_session
+    md = open(os.path.join(sess, "iter0", "report", "report.md")).read()
+    assert "## per-layer attribution — mamba-tiny" in md
+    assert "| layer0 |" in md and "| **total** |" in md
+    html = open(os.path.join(sess, "iter0", "report", "index.html")).read()
+    assert "per-layer attribution" in html
+
+
+def test_model_rerun_with_cache_is_bit_identical(tmp_path):
+    # the model-smoke CI contract: a cached rerun serves hits and the
+    # stored heat maps stay bit-identical with the uncached run
+    sess = str(tmp_path / "s")
+    cache = str(tmp_path / "cache")
+    a = _run_cli("model", "mamba-tiny", "--out", sess, "--no-hlo", "-q",
+                 "--cache", cache)
+    assert a.returncode == 0, a.stderr
+    b = _run_cli("model", "mamba-tiny", "--out", sess, "--no-hlo", "-q",
+                 "--cache", cache)
+    assert b.returncode == 0, b.stderr
+    sys.path.insert(0, os.path.abspath(REPO_SRC))
+    from repro.core.session import heatmaps_equal, load_iteration
+
+    first = load_iteration(os.path.join(sess, "iter0"))
+    second = load_iteration(os.path.join(sess, "iter1"))
+    assert first.layers == second.layers
+    for x, y in zip(first.kernels, second.kernels):
+        assert heatmaps_equal(x.heatmap, y.heatmap)

@@ -1,6 +1,9 @@
 """Per-arch SMOKE tests: reduced same-family config, one forward + one
 train step on CPU, asserting output shapes + no NaNs (the assignment's
-required smoke matrix)."""
+required smoke matrix) — plus the registered ``cuthermo model`` configs
+(transformer-tiny / moe-tiny / mamba-tiny): forward shape+dtype, grad
+finiteness through the loss, and bit-exact determinism under a fixed
+seed (the property whole-model profiling and its CI job lean on)."""
 
 import jax
 import jax.numpy as jnp
@@ -9,6 +12,7 @@ import pytest
 
 from repro.configs import ARCH_IDS, SUBQUADRATIC, get_config
 from repro.models import build_model
+from repro.models.registry import MODELS, get_model, model_names
 from repro.optim import adamw, constant
 from repro.runtime import TrainConfig, build_train_step, init_state
 
@@ -113,3 +117,71 @@ def test_active_params_moe():
     assert 35e9 < active < 40e9  # paper: 37B activated
     total, active = get_config("llama4-scout-17b-a16e").param_counts()
     assert 14e9 < active < 19e9  # ~17B activated
+
+
+# ---------------------------------------------------------------------------
+# the registered `cuthermo model` configs
+# ---------------------------------------------------------------------------
+
+
+def _model_batch(name):
+    entry = get_model(name)
+    model = build_model(entry.config)
+    params = model.init(jax.random.key(0))
+    tokens = jax.random.randint(
+        jax.random.key(1), (entry.batch, entry.seq), 0, entry.config.vocab
+    )
+    return entry, model, params, tokens
+
+
+@pytest.mark.parametrize("name", model_names())
+def test_registered_model_forward_shape_and_dtype(name):
+    entry, model, params, tokens = _model_batch(name)
+    cfg = entry.config
+    logits, _, _ = model.apply(params, tokens)
+    assert logits.shape == (entry.batch, entry.seq, cfg.padded_vocab)
+    assert logits.dtype == cfg.dtype
+    assert bool(jnp.isfinite(logits).all())
+
+
+@pytest.mark.parametrize("name", model_names())
+def test_registered_model_grads_are_finite(name):
+    entry, model, params, tokens = _model_batch(name)
+    labels = jnp.roll(tokens, -1, axis=1)
+
+    def scalar_loss(p):
+        loss, _aux = model.loss(p, tokens, labels)
+        return loss
+
+    loss, grads = jax.value_and_grad(scalar_loss)(params)
+    assert np.isfinite(float(loss))
+    leaves = jax.tree.leaves(grads)
+    assert leaves, "loss produced an empty grad tree"
+    for g in leaves:
+        assert bool(jnp.isfinite(g).all())
+    # the loss actually depends on the parameters
+    assert any(float(jnp.abs(g).max()) > 0 for g in leaves)
+
+
+@pytest.mark.parametrize("name", model_names())
+def test_registered_model_forward_is_deterministic(name):
+    # same seed, fresh params and fresh apply: bit-identical logits —
+    # the invariant the `model-smoke` CI job's cached rerun relies on
+    _, _, params_a, tokens_a = _model_batch(name)
+    _, model, params_b, tokens_b = _model_batch(name)
+    assert np.array_equal(np.asarray(tokens_a), np.asarray(tokens_b))
+    for a, b in zip(jax.tree.leaves(params_a), jax.tree.leaves(params_b)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    la, _, _ = model.apply(params_a, tokens_a)
+    lb, _, _ = model.apply(params_b, tokens_b)
+    assert np.array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_registered_model_shapes_are_ci_sized():
+    # the registry promises CI-scale models; a config growth that would
+    # blow up the model-smoke job budget should fail here first
+    for name, entry in MODELS.items():
+        cfg = entry.config
+        assert cfg.n_layers <= 4, name
+        assert cfg.d_model <= 256, name
+        assert entry.batch * entry.seq <= 512, name

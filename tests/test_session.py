@@ -210,17 +210,18 @@ def test_workers2_session_end_to_end_with_shard_provenance(tmp_path):
 
 
 def test_v1_artifact_still_loads(tmp_path):
-    """The v4 loader reads v1 artifacts (no shard or tuning provenance)."""
+    """The v5 loader reads v1 artifacts (no shard or tuning provenance)."""
     from repro.core.session import SUPPORTED_VERSIONS
 
-    assert 1 in SUPPORTED_VERSIONS and ARTIFACT_VERSION == 4
+    assert 1 in SUPPORTED_VERSIONS and ARTIFACT_VERSION == 5
     path = write_iteration(tmp_path / "iter0", [_profiled()])
     mpath = path / "manifest.json"
     manifest = json.loads(mpath.read_text())
-    # rewrite as a faithful v1 artifact: old stamp, no shards/tuning
-    # keys, no v4 scratch_words metric
+    # rewrite as a faithful v1 artifact: old stamp, no shards/tuning/
+    # layers keys, no v4 scratch_words metric
     manifest["version"] = 1
     manifest.pop("tuning", None)
+    manifest.pop("layers", None)
     for entry in manifest["kernels"]:
         entry["heatmap"].pop("shards", None)
         entry.pop("scratch_words", None)
