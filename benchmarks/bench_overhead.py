@@ -33,6 +33,13 @@ Cache section: the content-addressed collection cache
 (collect + store) vs warm rerun (lookup), asserting the hit is
 bit-identical and recording the hit/miss counters.
 
+Fault-recovery section: the same sharded collection with ONE injected
+worker crash (``repro.core.faultinject``, crashes=1 timeouts=0) against
+the clean pool run — the crash forces a pool teardown + respawn and a
+shard re-delivery, the merged map must stay bit-identical, and
+``fault_recovery_overhead_pct`` records the wall-time cost of that
+recovery (target < 15%).
+
 Machine-readable output: every __main__ run (and ``benchmarks/run.py``)
 writes ``BENCH_collect.json`` — throughput, wall times, shard count,
 speedups, git sha — next to the human-readable text.
@@ -358,6 +365,78 @@ def run_cached(
     ]
 
 
+def run_fault_recovery(
+    m: int = 4096, workers: int = 4, reps: int = 2
+) -> List[Tuple[str, float, str]]:
+    """Wall-time cost of recovering from one injected worker crash.
+
+    Same full-grid GEMM walk as the sharded section, but the pool runs
+    under a deterministic fault plan that kills the victim shard's
+    worker on its first delivery (``os._exit`` — a real process death,
+    not an exception).  The collector detects the broken pool, respawns
+    it, and re-delivers the shard; the merged map must stay
+    bit-identical to the clean pool run.  Both sides take the best of
+    ``reps`` on a pre-warmed pool, so the overhead is pure recovery
+    (teardown + respawn + re-delivery), not cold-start noise.
+    """
+    from repro.core.faultinject import FaultPlan
+
+    spec = sourced_spec("repro.kernels.gemm:gemm_v00_spec", m, m, m)
+    sampler = GridSampler(None)
+    # a single shard collects in process (no pool, nothing to crash),
+    # so this metric needs >= 2 shards even on a 1-core box — both
+    # sides share the topology, so the delta is still pure recovery
+    used = max(2, effective_workers(workers))
+
+    sc = ShardedCollector(used)
+    try:
+        sc.warmup()
+        wall_clean = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            hm_clean = sc.analyze(spec, sampler)
+            wall_clean = min(wall_clean, time.perf_counter() - t0)
+    finally:
+        sc.close()
+
+    plan = FaultPlan.parse("seed=7,crashes=1,timeouts=0")
+    sc = ShardedCollector(used, fault_plan=plan)
+    try:
+        sc.warmup()
+        wall_faulted = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            hm_faulted = sc.analyze(spec, sampler)
+            wall_faulted = min(wall_faulted, time.perf_counter() - t0)
+    finally:
+        sc.close()
+
+    assert hm_clean.faults == ()
+    kinds = sorted({e.kind for e in hm_faulted.faults})
+    assert "worker-crash" in kinds and "pool-rebuild" in kinds, kinds
+    assert heatmaps_equal(hm_clean, hm_faulted), (
+        "crash recovery diverged from the clean pool run"
+    )
+    overhead_pct = (wall_faulted - wall_clean) / wall_clean * 100.0
+    print(f"-- fault recovery: gemm_v00 {m}x{m}x{m}, one injected "
+          f"worker crash, workers={used} --")
+    print("mode,wall_s,faults")
+    print(f"clean,{wall_clean:.4f},none")
+    print(f"crashed,{wall_faulted:.4f},{'+'.join(kinds)} "
+          f"(bit-identical merge: yes)")
+    print(f"fault_recovery_overhead_pct,{overhead_pct:.1f}%,"
+          f"(target < 15%)")
+    if overhead_pct >= 15:
+        print("WARNING: crash-recovery overhead above the 15% target",
+              file=sys.stderr)
+    return [
+        ("fault_recovery_overhead_pct", overhead_pct,
+         f"one injected worker crash (pool teardown + respawn + shard "
+         f"re-delivery) vs clean pool at workers={used}, bit-identical "
+         f"(target < 15%)"),
+    ]
+
+
 def _git_sha() -> str:
     try:
         return subprocess.run(
@@ -414,6 +493,7 @@ def run_all(
     shard_m = 2048 if smoke else 4096
     results += run_sharded(m=shard_m, workers=workers, collector=collector)
     results += run_cached(m=shard_m, collector=collector)
+    results += run_fault_recovery(m=shard_m, workers=workers)
     if not throughput_only and not smoke:
         results += run()
     if json_path:

@@ -161,6 +161,15 @@ def _build_parser() -> argparse.ArgumentParser:
     pr.add_argument("--label", default=None, help="iteration label")
     pr.add_argument("--note", default="", help="free-form iteration note")
     pr.add_argument(
+        "--inject-faults",
+        default=None,
+        metavar="SPEC",
+        help="deterministically inject faults into sharded collection "
+        "(e.g. 'seed=7' or 'seed=7,timeouts=0'); recovery is recorded "
+        "as FaultEvent provenance and the heat maps stay bit-identical "
+        "to a clean run",
+    )
+    pr.add_argument(
         "--quiet", "-q", action="store_true",
         help="suppress per-kernel text reports",
     )
@@ -251,6 +260,20 @@ def _build_parser() -> argparse.ArgumentParser:
     )
     mo.add_argument("--label", default=None, help="iteration label")
     mo.add_argument("--note", default="", help="free-form iteration note")
+    mo.add_argument(
+        "--inject-faults",
+        default=None,
+        metavar="SPEC",
+        help="deterministically inject faults into sharded collection "
+        "(e.g. 'seed=7'); recovery is recorded as FaultEvent provenance",
+    )
+    mo.add_argument(
+        "--resume",
+        action="store_true",
+        help="resume a preempted run from the session's model journal: "
+        "kernels the preempted run flushed are reused verbatim, only "
+        "the remainder is profiled",
+    )
     mo.add_argument(
         "--quiet", "-q", action="store_true",
         help="suppress the per-layer table",
@@ -464,6 +487,21 @@ def _build_parser() -> argparse.ArgumentParser:
         "linter prices as strictly worse than the incumbent)",
     )
     tn.add_argument(
+        "--inject-faults",
+        default=None,
+        metavar="SPEC",
+        help="deterministically inject faults into sharded collection "
+        "(e.g. 'seed=7'); candidate profiles that still fail are "
+        "skipped as candidate-failure provenance, never fatal",
+    )
+    tn.add_argument(
+        "--resume",
+        action="store_true",
+        help="(with --all) resume a preempted run: replay the journaled "
+        "arguments deterministically — completed profiles come back "
+        "bit-identical from the cache, trajectories are unchanged",
+    )
+    tn.add_argument(
         "--report",
         action="store_true",
         help="write the report bundle (with the tuning trajectory) to "
@@ -503,6 +541,34 @@ def _parse_sampler(spec: Optional[str]):
         file=sys.stderr,
     )
     raise SystemExit(2)
+
+
+def _parse_fault_plan(spec: Optional[str]):
+    """Parse a ``--inject-faults`` value into a FaultPlan (None = off)."""
+    if spec is None:
+        return None
+    from repro.core.faultinject import FaultInjectError, FaultPlan
+
+    try:
+        plan = FaultPlan.parse(spec)
+    except FaultInjectError as e:
+        print(f"cuthermo: {e}", file=sys.stderr)
+        raise SystemExit(2)
+    print(f"fault injection armed: {plan.describe()}", file=sys.stderr)
+    return plan
+
+
+def _print_fault_summary(faults) -> None:
+    """One stderr line summarizing an iteration's recovery provenance."""
+    if not faults:
+        return
+    from repro.core.resilience import FaultEvent, summarize_faults
+
+    events = tuple(
+        FaultEvent.from_dict({k: v for k, v in f.items() if k != "kernel"})
+        for f in faults
+    )
+    print(f"recovered faults: {summarize_faults(events)}", file=sys.stderr)
 
 
 def _cmd_kernels(args: argparse.Namespace) -> int:
@@ -615,6 +681,7 @@ def _cmd_profile(args: argparse.Namespace) -> int:
         )
         return 2
     override = _parse_sampler(args.sampler)
+    plan = _parse_fault_plan(args.inject_faults)
     try:
         resolved = [kreg.resolve(ref) for ref in refs]
     except KeyError as e:
@@ -634,7 +701,7 @@ def _cmd_profile(args: argparse.Namespace) -> int:
     for entry, _ in resolved:
         entry_counts[entry.name] = entry_counts.get(entry.name, 0) + 1
     try:
-        sess = ProfileSession(args.out, cache=args.cache)
+        sess = ProfileSession(args.out, cache=args.cache, fault_plan=plan)
     except SessionError as e:
         print(f"cuthermo: {e}", file=sys.stderr)
         return 2
@@ -694,6 +761,7 @@ def _cmd_profile(args: argparse.Namespace) -> int:
             f"cache: {st.hits} hits ({st.memory_hits} memory, "
             f"{st.disk_hits} disk), {st.misses} misses"
         )
+    _print_fault_summary(it.faults)
     print(f"wrote {it.path} ({len(profiled)} kernels)")
     return 0
 
@@ -703,7 +771,9 @@ def _cmd_model(args: argparse.Namespace) -> int:
 
     Exit-code contract: 0 profiled (and under budget), 1 the
     ``--max-transfers`` budget is blown, 2 usage or load error (unknown
-    model, bad ``--config`` override, unreadable session).
+    model, bad ``--config`` override, unreadable session, invalid
+    ``--resume``), 3 preempted — a SIGTERM/SIGINT flushed a partial
+    iteration and left a journal; re-run with ``--resume`` to finish.
     """
     import os
 
@@ -730,7 +800,17 @@ def _cmd_model(args: argparse.Namespace) -> int:
             file=sys.stderr,
         )
         return 2
+    import signal
+
+    from repro.runtime.fault import Preempted, PreemptionHandler
+
     sampler = _parse_sampler(args.sampler)
+    plan = _parse_fault_plan(args.inject_faults)
+    # SIGTERM/SIGINT flip a flag; profile_model sees it at the next
+    # kernel boundary, flushes a partial iteration and raises Preempted
+    handler = PreemptionHandler().register(
+        (signal.SIGTERM, signal.SIGINT)
+    )
     try:
         it = profile_model(
             args.name,
@@ -743,11 +823,19 @@ def _cmd_model(args: argparse.Namespace) -> int:
             label=args.label,
             note=args.note,
             hlo=not args.no_hlo,
+            fault_plan=plan,
+            preemption=handler,
+            resume=args.resume,
         )
+    except Preempted as e:
+        print(f"cuthermo: {e}", file=sys.stderr)
+        return 3
     except (KeyError, ValueError, SessionError) as e:
         msg = e.args[0] if e.args else e
         print(f"cuthermo: {msg}", file=sys.stderr)
         return 2
+    finally:
+        handler.unregister()
     total = iteration_transactions(it)
     layers = it.layers or {}
     if not args.quiet:
@@ -781,8 +869,10 @@ def _cmd_model(args: argparse.Namespace) -> int:
             os.path.join(str(it.path), "report"),
             title=f"cuthermo model report — {it.label}",
             layers=layers or None,
+            faults=list(it.faults) or None,
         )
         print(f"wrote {written['index.html']}")
+    _print_fault_summary(it.faults)
     print(f"wrote {it.path} ({len(it.kernels)} kernels, {total} transfers)")
     if args.max_transfers is not None and total > args.max_transfers:
         print(
@@ -893,6 +983,7 @@ def _cmd_report(args: argparse.Namespace) -> int:
     written = write_report_bundle(
         entries, out, title=title, tuning=tuning, check=check,
         lint=lint or None, layers=it.layers,
+        faults=list(it.faults) or None,
     )
     print(f"wrote {written['index.html']}")
     print(f"wrote {written['report.md']}")
@@ -900,7 +991,16 @@ def _cmd_report(args: argparse.Namespace) -> int:
 
 
 def _cmd_tune(args: argparse.Namespace) -> int:
-    """Handler for ``cuthermo tune``."""
+    """Handler for ``cuthermo tune``.
+
+    Exit-code contract: 0 tuned, 2 usage or load error, 3 preempted —
+    with ``--all``, a SIGTERM/SIGINT stopped the scheduler at a round
+    boundary (committed iterations are durable, the run journal stays);
+    ``cuthermo tune --all --resume`` replays the journaled run
+    deterministically, so the finished trajectories are identical to an
+    uninterrupted run's.
+    """
+    import json as _json
     import os
 
     from repro.core.session import ProfileSession, SessionError
@@ -913,8 +1013,16 @@ def _cmd_tune(args: argparse.Namespace) -> int:
             file=sys.stderr,
         )
         return 2
+    if args.resume and not args.all:
+        print(
+            "cuthermo tune: --resume requires --all (single-family tune "
+            "has no run journal)",
+            file=sys.stderr,
+        )
+        return 2
+    plan = _parse_fault_plan(args.inject_faults)
     try:
-        sess = ProfileSession(args.out, cache=args.cache)
+        sess = ProfileSession(args.out, cache=args.cache, fault_plan=plan)
     except SessionError as e:
         print(f"cuthermo: {e}", file=sys.stderr)
         return 2
@@ -924,24 +1032,81 @@ def _cmd_tune(args: argparse.Namespace) -> int:
     results = []
     try:
         if args.all:
-            from repro.core.tuner import tune_all
+            import signal
 
+            from repro.core.tuner import tune_all
+            from repro.runtime.fault import Preempted, PreemptionHandler
+
+            run = {
+                "format": "cuthermo-tune-journal",
+                "version": 1,
+                "kernels": list(args.kernel),
+                "budget": budget,
+                "seed": args.seed,
+                "target_patterns": list(args.target_pattern),
+                "use_generated": not args.no_generated,
+                "static_prescreen": not args.no_prescreen,
+            }
+            jpath = sess.root / "tune.journal.json"
+            if args.resume:
+                # resume-by-replay: the journal's arguments, not the
+                # command line's, define the run — re-executing them is
+                # deterministic (seeded tie-breaks, ordered commitment)
+                # and cheap (completed profiles hit the cache)
+                try:
+                    run = _json.loads(jpath.read_text())
+                except (OSError, _json.JSONDecodeError) as e:
+                    print(
+                        f"cuthermo: nothing to resume ({jpath}: {e})",
+                        file=sys.stderr,
+                    )
+                    return 2
+                if run.get("format") != "cuthermo-tune-journal":
+                    print(
+                        f"cuthermo: {jpath} is not a tune journal",
+                        file=sys.stderr,
+                    )
+                    return 2
+                print(
+                    f"resuming journaled tune --all (seed {run['seed']}, "
+                    f"budget {run['budget']})",
+                    file=sys.stderr,
+                )
+            else:
+                tmp = jpath.with_name(jpath.name + ".tmp")
+                tmp.write_text(_json.dumps(run, indent=2) + "\n")
+                os.replace(tmp, jpath)
+            handler = PreemptionHandler().register(
+                (signal.SIGTERM, signal.SIGINT)
+            )
             try:
                 res_all = tune_all(
-                    args.kernel or None,
-                    budget=budget,
-                    target_patterns=args.target_pattern or None,
-                    seed=args.seed,
-                    use_generated=not args.no_generated,
-                    static_prescreen=not args.no_prescreen,
+                    run["kernels"] or None,
+                    budget=int(run["budget"]),
+                    target_patterns=run["target_patterns"] or None,
+                    seed=int(run["seed"]),
+                    use_generated=bool(run["use_generated"]),
+                    static_prescreen=bool(run["static_prescreen"]),
                     session=sess,
                     collector=sess.collector(workers),
                     cache=sess.cache,
                     progress=progress,
+                    preemption=handler,
                 )
+            except Preempted as e:
+                print(f"cuthermo: {e}", file=sys.stderr)
+                print(
+                    "cuthermo: run journal kept; finish with "
+                    "`cuthermo tune --all --resume`",
+                    file=sys.stderr,
+                )
+                return 3
             except (TuneError, SessionError) as e:
                 print(f"cuthermo: {e}", file=sys.stderr)
                 return 2
+            finally:
+                handler.unregister()
+            jpath.unlink(missing_ok=True)
             results = list(res_all.results)
             print(res_all.summary())
             print()
@@ -982,6 +1147,11 @@ def _cmd_tune(args: argparse.Namespace) -> int:
             os.path.join(args.out, "report"),
             title="cuthermo tune report",
             tuning=[r.as_dict() for r in results],
+            faults=[
+                dict(e.as_dict(), kernel=r.kernel)
+                for r in results
+                for e in r.faults
+            ] or None,
         )
         print(f"wrote {written['index.html']}")
     improved = sum(1 for r in results if r.improved)

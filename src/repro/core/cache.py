@@ -266,6 +266,10 @@ class CacheStats:
     memory_hits: int = 0
     disk_hits: int = 0
     uncacheable: int = 0
+    # entries found on disk but defective (truncated npz, unreadable
+    # meta, torn pair) — quarantined, counted, and missed; distinct
+    # from `misses` so a corruption storm is visible in BENCH metrics
+    corrupt: int = 0
 
     def as_dict(self) -> dict:
         """JSON-ready counters (the BENCH ``metrics`` block shape)."""
@@ -284,12 +288,21 @@ class CollectionCache:
     version mismatch, truncated JSON) count as misses; :meth:`put`
     never raises on disk errors either.  The worst a broken cache can
     do is cost a re-trace.
+
+    A *present but defective* disk entry (truncated or unreadable npz,
+    broken meta JSON, a torn npz/meta pair) is more than a plain miss:
+    it is moved to ``<dir>/quarantine/`` so it cannot silently eat a
+    lookup on every future run, counted in ``stats.corrupt``, and
+    warned about once per key.  Entries written by a *different build*
+    (format/version/cache-version mismatch) stay plain misses — they
+    are valid files, just not ours to read.
     """
 
     def __init__(self, path: Optional[Union[str, Path]] = None):
         self.path = None if path is None else Path(path)
         self._mem: Dict[str, Tuple[dict, Dict[str, np.ndarray]]] = {}
         self._lock = threading.Lock()
+        self._corrupt_warned: set = set()
         self.stats = CacheStats()
 
     # -- key paths ----------------------------------------------------------
@@ -332,30 +345,92 @@ class CollectionCache:
         if self.path is None:
             return None
         npz_path, meta_path = self._entry_paths(key)
+        if not meta_path.exists() and not npz_path.exists():
+            return None  # never stored: a plain miss
         try:
             with open(meta_path) as f:
                 meta = json.load(f)
-            from .session import SUPPORTED_VERSIONS
+        except FileNotFoundError:
+            self._quarantine(key, "npz present but meta missing (torn store)")
+            return None
+        except (OSError, json.JSONDecodeError, UnicodeDecodeError) as e:
+            self._quarantine(key, f"unreadable meta ({type(e).__name__})")
+            return None
+        from .session import SUPPORTED_VERSIONS
 
-            if (
-                meta.get("format") != CACHE_FORMAT
-                or meta.get("version") not in SUPPORTED_VERSIONS
-                or meta.get("cache_version") != CACHE_VERSION
-                or meta.get("key") != key
-            ):
-                return None
+        if (
+            meta.get("format") != CACHE_FORMAT
+            or meta.get("version") not in SUPPORTED_VERSIONS
+            or meta.get("cache_version") != CACHE_VERSION
+            or meta.get("key") != key
+        ):
+            # a valid entry from a different build/derivation: plain miss
+            return None
+        try:
             with np.load(npz_path) as data:
                 arrays = {k: np.asarray(data[k]) for k in data.files}
-            # round-trip sanity: a truncated npz must be a miss, not a
-            # KeyError three layers down
-            hm_meta = meta["heatmap"]
-            for i in range(len(hm_meta["regions"])):
-                for part in ("tags", "word_temps", "sector_temps"):
-                    if f"r{i}_{part}" not in arrays:
-                        return None
-            return hm_meta, arrays
-        except Exception:  # noqa: BLE001 — any broken entry is a miss
+        except FileNotFoundError:
+            self._quarantine(key, "meta present but npz missing (torn store)")
             return None
+        except Exception as e:  # noqa: BLE001 — zip/pickle/format errors
+            self._quarantine(key, f"corrupt npz ({type(e).__name__})")
+            return None
+        # round-trip sanity: a truncated npz must be a miss, not a
+        # KeyError three layers down
+        try:
+            hm_meta = meta["heatmap"]
+            n_regions = len(hm_meta["regions"])
+        except (KeyError, TypeError):
+            self._quarantine(key, "malformed heatmap metadata")
+            return None
+        for i in range(n_regions):
+            for part in ("tags", "word_temps", "sector_temps"):
+                if f"r{i}_{part}" not in arrays:
+                    self._quarantine(
+                        key, f"truncated npz (missing r{i}_{part})"
+                    )
+                    return None
+        return hm_meta, arrays
+
+    def _quarantine(self, key: str, why: str) -> None:
+        """Move a defective disk entry out of the lookup path.
+
+        Both halves of the entry go to ``<dir>/quarantine/`` (kept, not
+        deleted — an operator may want the evidence), the defect is
+        counted in ``stats.corrupt``, and the first hit per key warns.
+        Best-effort: a failure to quarantine still leaves the lookup a
+        miss, it just costs the scan again next time.
+        """
+        import warnings
+
+        npz_path, meta_path = self._entry_paths(key)
+        qdir = self.path / "quarantine"
+        try:
+            qdir.mkdir(parents=True, exist_ok=True)
+            for p in (npz_path, meta_path):
+                if not p.exists():
+                    continue
+                target = qdir / p.name
+                k = 1
+                while target.exists():
+                    k += 1
+                    target = qdir / f"{p.stem}-{k}{p.suffix}"
+                p.rename(target)
+        except OSError:
+            pass
+        first = False
+        with self._lock:
+            self.stats.corrupt += 1
+            if key not in self._corrupt_warned:
+                self._corrupt_warned.add(key)
+                first = True
+        if first:
+            warnings.warn(
+                f"collection cache entry {key[:12]}...: {why}; moved to "
+                f"{qdir} (the profile re-collects)",
+                RuntimeWarning,
+                stacklevel=4,
+            )
 
     # -- store --------------------------------------------------------------
     def put(self, key: str, hm: Heatmap) -> None:
@@ -364,11 +439,13 @@ class CollectionCache:
         The canonical (collection-path-independent) form is stored:
         shard provenance is stripped, since serial and sharded walks
         produce the same temperature state and a later hit may serve a
-        profile with a different worker count.
+        profile with a different worker count — and fault provenance
+        with it (the recovered map IS the clean map; the recovery
+        belonged to one collection, not to the content).
         """
         from .session import ARTIFACT_VERSION, heatmap_to_arrays
 
-        canonical = dataclasses.replace(hm, shards=())
+        canonical = dataclasses.replace(hm, shards=(), faults=())
         meta, arrays = heatmap_to_arrays(canonical)
         with self._lock:
             self._mem[key] = (meta, arrays)
@@ -382,7 +459,11 @@ class CollectionCache:
             with open(tmp, "wb") as f:
                 np.savez_compressed(f, **arrays)
             tmp.replace(npz_path)
-            with open(meta_path, "w") as f:
+            # the meta commits atomically too: a kill mid-store then
+            # leaves either no meta (quarantined as a torn pair on the
+            # next lookup) or a complete one — never a JSON prefix
+            mtmp = meta_path.with_suffix(".json.tmp")
+            with open(mtmp, "w") as f:
                 json.dump(
                     {
                         "format": CACHE_FORMAT,
@@ -400,6 +481,7 @@ class CollectionCache:
                     f,
                     indent=2,
                 )
+            mtmp.replace(meta_path)
         except Exception:  # noqa: BLE001 — a full disk must not kill a run
             pass
 

@@ -55,6 +55,7 @@ from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 import numpy as np
 
 from .heatmap import Analyzer, Heatmap
+from .resilience import DEFAULT_POLICY, FaultEvent, ResiliencePolicy
 from .tiles import TileGeometry, block_to_2d
 from .trace import (
     GridSampler,
@@ -70,6 +71,33 @@ from .trace import (
 )
 
 IndexMap = Callable[..., Tuple[int, ...]]
+
+#: Exception types an index map / access model is *expected* to raise
+#: when it cannot evaluate a probe (non-broadcastable arithmetic, bad
+#: arity, piecewise maps indexing out of range, ...).  The evaluation
+#: fallbacks below catch exactly these: anything else (KeyboardInterrupt,
+#: MemoryError, a bug in the collector itself) propagates instead of
+#: being silently swallowed into the slow path or a None verdict.
+_MAP_EVAL_ERRORS = (
+    TypeError,
+    ValueError,
+    IndexError,
+    KeyError,
+    AttributeError,
+    OverflowError,
+    ZeroDivisionError,
+    FloatingPointError,
+)
+
+
+class ShardError(RuntimeError):
+    """A shard worker failed; the message carries shard + spec context.
+
+    Raised (in the worker, so it crosses the process boundary as a
+    picklable exception) when shard collection itself fails — rebuild
+    guard violations (stale source) keep their original types, since
+    they are usage errors, not transient faults.
+    """
 
 
 @dataclasses.dataclass(frozen=True)
@@ -190,8 +218,8 @@ def _eval_index_map_batch(
                     break
             if ok:
                 return arr
-        except Exception:
-            pass
+        except _MAP_EVAL_ERRORS:
+            pass  # map doesn't broadcast: take the per-program loop
     rows = [_scalar(pids[i]) for i in range(p)]
     return np.asarray(rows, dtype=np.int64).reshape(p, -1)
 
@@ -286,7 +314,9 @@ def probe_affine_map(
         for pt in _affine_probe_points(grid):
             if at(pt) != model.predict(pt):
                 return None
-    except Exception:
+    except _MAP_EVAL_ERRORS:
+        # a map that raises on any probe point is non-affine by
+        # definition here; anything unexpected propagates to the caller
         return None
     return model
 
@@ -652,19 +682,38 @@ def _collect_shard_task(task: dict) -> Tuple[TraceBuffer, ShardInfo]:
     worker process, so repeated collects of one kernel (a tuning loop,
     a benchmark's reps) rebuild once; an explicit dynamic context
     (plain numpy arrays) overrides the seeded one.
+
+    ``task['inject']`` (optional) is a fault-injection directive
+    executed before collection (see :mod:`repro.core.faultinject`);
+    collection failures are re-raised as :class:`ShardError` carrying
+    shard + spec context — the rebuild guard's stale-source error keeps
+    its own type (a usage error, not a shard fault).
     """
+    if task.get("inject"):
+        from .faultinject import apply_worker_directive
+
+        apply_worker_directive(task["inject"])
     spec, ctx = _rebuild_spec_cached(task["source"], task["fingerprint"])
     if task["dynamic_context"] is not None:
         ctx = task["dynamic_context"]
-    return collect_shard(
-        spec,
-        task["sampler"],
-        ctx,
-        task["lo"],
-        task["hi"],
-        task["shard"],
-        task["max_records"],
-    )
+    try:
+        return collect_shard(
+            spec,
+            task["sampler"],
+            ctx,
+            task["lo"],
+            task["hi"],
+            task["shard"],
+            task["max_records"],
+        )
+    except ShardError:
+        raise
+    except Exception as e:
+        raise ShardError(
+            f"shard {task['shard']} [{task['lo']}:{task['hi']}) of "
+            f"{spec.name!r} (source {task['source']!r}): "
+            f"{type(e).__name__}: {e}"
+        ) from e
 
 
 def _unify_shard_groups(bufs: Sequence[TraceBuffer]) -> None:
@@ -703,6 +752,29 @@ class ShardedCollector:
     boundary (their index maps are lambdas); those are sharded and
     merged **in-process** — the same algebra, no parallelism — so the
     call never silently changes semantics, it only loses speed.
+
+    Collection is *fault tolerant* under ``policy`` (a
+    :class:`~repro.core.resilience.ResiliencePolicy`):
+
+    * a shard that fails cleanly is resubmitted with exponential
+      backoff, up to ``policy.attempts`` deliveries;
+    * a dead worker (``BrokenProcessPool``) tears the pool down,
+      respawns it, and resubmits every unfinished shard — after
+      ``policy.max_pool_failures`` consecutive broken rounds the
+      collector degrades to serial in-process collection;
+    * a shard still running ``policy.shard_timeout_s`` after its round
+      started is declared hung: its worker is killed and the shard
+      re-runs in process, re-split into ``policy.resplit`` smaller pid
+      runs.
+
+    Every recovery is recorded as a structured
+    :class:`~repro.core.resilience.FaultEvent`; :meth:`analyze`
+    attaches them to ``Heatmap.faults`` (v6 artifact provenance).  The
+    set-union merge algebra makes re-executed shards exact, so the
+    recovered heat map stays bit-identical to the clean serial build.
+    ``fault_plan`` (a :class:`~repro.core.faultinject.FaultPlan`)
+    deterministically injects worker crashes and hangs for tests and
+    the chaos CI job.
     """
 
     def __init__(
@@ -711,14 +783,32 @@ class ShardedCollector:
         *,
         max_records: int = 2_000_000,
         start_method: str = "spawn",
+        policy: Optional[ResiliencePolicy] = None,
+        fault_plan=None,
     ):
         self.workers = max(1, int(workers))
         self.max_records = max_records
         self.start_method = start_method
+        self.fault_plan = fault_plan
+        if policy is not None:
+            self.policy = policy
+        elif fault_plan is not None:
+            # injected hangs must expire in test time, not production time
+            self.policy = fault_plan.policy()
+        else:
+            self.policy = DEFAULT_POLICY
         self._pool = None
         # pool creation must be race-free: the concurrent tune
         # scheduler shares one collector across profiling threads
         self._pool_lock = threading.Lock()
+        # fault events are per-collect and per-thread (the concurrent
+        # tune scheduler profiles on several threads at once)
+        self._tls = threading.local()
+
+    @property
+    def last_fault_events(self) -> Tuple[FaultEvent, ...]:
+        """Recovery events of this thread's most recent :meth:`collect`."""
+        return getattr(self._tls, "events", ())
 
     # -- pool lifecycle -----------------------------------------------------
     def _ensure_pool(self):
@@ -732,6 +822,20 @@ class ShardedCollector:
                     mp_context=multiprocessing.get_context(self.start_method),
                 )
             return self._pool
+
+    def _warm(self, pool) -> None:
+        """Pay worker spawn + imports BEFORE a watchdog-timed round.
+
+        The hang watchdog is meant to time *shard execution*; on a cold
+        pool the first round would otherwise also absorb process spawn
+        and registry imports, and a tight watchdog (as fault-injection
+        plans install) would declare healthy-but-booting workers hung.
+        Warming is idempotent per pool instance.
+        """
+        if getattr(pool, "_cuthermo_warm", False):
+            return
+        list(pool.map(_warm_worker, range(self.workers)))
+        pool._cuthermo_warm = True
 
     def warmup(self) -> float:
         """Pre-import the kernel registry in every worker (pays the
@@ -750,6 +854,28 @@ class ShardedCollector:
                 self._pool.shutdown()
                 self._pool = None
 
+    def _kill_pool(self) -> None:
+        """Tear the pool down the hard way (hung or broken workers).
+
+        ``shutdown`` alone would block behind a hung worker, so worker
+        processes are terminated best-effort first; a fresh pool is
+        spun up lazily by the next :meth:`_ensure_pool`.
+        """
+        with self._pool_lock:
+            pool, self._pool = self._pool, None
+        if pool is None:
+            return
+        for p in list(getattr(pool, "_processes", {}).values() or []):
+            try:
+                if p.is_alive():
+                    p.terminate()
+            except (OSError, ValueError, AttributeError):
+                pass  # already dead / already closed
+        try:
+            pool.shutdown(wait=False, cancel_futures=True)
+        except (OSError, RuntimeError):
+            pass
+
     def __enter__(self) -> "ShardedCollector":
         return self
 
@@ -767,7 +893,10 @@ class ShardedCollector:
 
         The returned buffers have already had their group tokens
         unified — ingesting them all into one Analyzer flushes the
-        exact single-pass heat map.
+        exact single-pass heat map.  Recovery events of the call are
+        exposed as :attr:`last_fault_events` (empty for a clean run);
+        a shard re-split by the hang watchdog contributes one buffer
+        and one ``ShardInfo`` per sub-run, all under its shard id.
         """
         sampler = sampler or GridSampler()
         total = sampled_grid_size(kernel.grid, sampler)
@@ -775,34 +904,279 @@ class ShardedCollector:
         # the GLOBAL record cap is divided across shards, so a sharded
         # collect never admits more records than the serial one would
         budgets = split_budget(self.max_records, len(bounds))
+        events: List[FaultEvent] = []
         if kernel.source is None or len(bounds) == 1:
-            results = [
-                collect_shard(
-                    kernel, sampler, dynamic_context, lo, hi, i,
-                    budgets[i],
-                )
+            results = {
+                i: [collect_shard(
+                    kernel, sampler, dynamic_context, lo, hi, i, budgets[i]
+                )]
                 for i, (lo, hi) in enumerate(bounds)
-            ]
+            }
         else:
-            tasks = [
-                {
-                    "source": kernel.source,
-                    "fingerprint": _spec_fingerprint(kernel),
-                    "sampler": sampler,
-                    "dynamic_context": dynamic_context,
-                    "lo": lo,
-                    "hi": hi,
-                    "shard": i,
-                    "max_records": budgets[i],
-                }
-                for i, (lo, hi) in enumerate(bounds)
-            ]
-            pool = self._ensure_pool()
-            results = list(pool.map(_collect_shard_task, tasks))
-        bufs = [b for b, _ in results]
-        infos = tuple(i for _, i in results)
+            results = self._collect_resilient(
+                kernel, sampler, dynamic_context, bounds, budgets, events
+            )
+        pairs = [pair for i in sorted(results) for pair in results[i]]
+        bufs = [b for b, _ in pairs]
+        infos = tuple(i for _, i in pairs)
+        self._tls.events = tuple(events)
         _unify_shard_groups(bufs)
         return bufs, infos
+
+    def _collect_resilient(
+        self,
+        kernel: KernelSpec,
+        sampler: GridSampler,
+        dynamic_context: Optional[Dict[str, np.ndarray]],
+        bounds: List[Tuple[int, int]],
+        budgets: List[int],
+        events: List[FaultEvent],
+    ) -> Dict[int, List[Tuple[TraceBuffer, ShardInfo]]]:
+        """The recovery loop: submit rounds of shards until all complete.
+
+        Each round submits every unfinished shard to the pool and waits
+        under the hang watchdog.  Clean per-shard failures retry with
+        backoff (bounded by ``policy.attempts``); a broken pool is
+        rebuilt and the round repeated (bounded by
+        ``policy.max_pool_failures``, then serial fallback); hung
+        shards are expired by the watchdog and re-run in process —
+        which always terminates — so the loop converges.
+        """
+        import concurrent.futures
+        from concurrent.futures.process import BrokenProcessPool
+
+        policy = self.policy
+        plan = self.fault_plan
+        fingerprint = _spec_fingerprint(kernel)
+        n = len(bounds)
+
+        def task_for(i: int, attempt: int) -> dict:
+            lo, hi = bounds[i]
+            inject = (
+                plan.directive(kernel.name, n, i, attempt)
+                if plan is not None
+                else None
+            )
+            return {
+                "source": kernel.source,
+                "fingerprint": fingerprint,
+                "sampler": sampler,
+                "dynamic_context": dynamic_context,
+                "lo": lo,
+                "hi": hi,
+                "shard": i,
+                "max_records": budgets[i],
+                "inject": inject,
+            }
+
+        results: Dict[int, List[Tuple[TraceBuffer, ShardInfo]]] = {}
+        attempts = {i: 0 for i in range(n)}
+        pool_failures = 0
+        remaining = set(range(n))
+        while remaining:
+            if pool_failures >= policy.max_pool_failures:
+                # graceful degradation: no parallelism, but the run and
+                # its bit-identical heat map still complete
+                events.append(
+                    FaultEvent(
+                        kind="serial-fallback",
+                        where="collector",
+                        detail=(
+                            f"{len(remaining)} shard(s) collected serially "
+                            f"after {pool_failures} consecutive pool failures"
+                        ),
+                    )
+                )
+                for i in sorted(remaining):
+                    results[i] = self._run_shard_local(
+                        kernel, sampler, dynamic_context, bounds[i],
+                        budgets[i], i, events,
+                    )
+                remaining.clear()
+                break
+            pool = self._ensure_pool()
+            try:
+                self._warm(pool)
+            except BrokenProcessPool:
+                # a worker died while booting (genuine environment
+                # failure — injection never targets warm-up): count it
+                # against the pool-failure budget and respin
+                pool_failures += 1
+                self._kill_pool()
+                events.append(
+                    FaultEvent(
+                        kind="worker-crash",
+                        where="collector",
+                        detail="process pool broke during warm-up",
+                    )
+                )
+                continue
+            round_start = time.monotonic()
+            futs = {}
+            for i in sorted(remaining):
+                futs[pool.submit(_collect_shard_task,
+                                 task_for(i, attempts[i]))] = i
+                attempts[i] += 1
+            done, not_done = concurrent.futures.wait(
+                futs, timeout=policy.shard_timeout_s
+            )
+            broken = False
+            retry_backoff = 0.0
+            for fut in sorted(done, key=lambda f: futs[f]):
+                i = futs[fut]
+                try:
+                    results[i] = [fut.result()]
+                    remaining.discard(i)
+                except BrokenProcessPool:
+                    # one dead worker fails every pending future; record
+                    # the crash once, rebuild below, resubmit next round
+                    if not broken:
+                        events.append(
+                            FaultEvent(
+                                kind="worker-crash",
+                                where="collector",
+                                shard=i,
+                                attempt=attempts[i] - 1,
+                                wall_s=time.monotonic() - round_start,
+                                detail="process pool broke (worker died)",
+                            )
+                        )
+                    broken = True
+                except Exception as e:
+                    if attempts[i] >= policy.attempts:
+                        raise
+                    events.append(
+                        FaultEvent(
+                            kind="shard-retry",
+                            where="collector",
+                            shard=i,
+                            attempt=attempts[i] - 1,
+                            detail=f"{type(e).__name__}: {e}"[:200],
+                        )
+                    )
+                    retry_backoff = max(
+                        retry_backoff, policy.backoff_s(attempts[i])
+                    )
+            if not_done:
+                # the hang watchdog: kill the wedged workers, re-run the
+                # hung shards in process (re-split into smaller pid runs)
+                hung = sorted(futs[f] for f in not_done)
+                for f in not_done:
+                    f.cancel()
+                self._kill_pool()
+                for i in hung:
+                    events.append(
+                        FaultEvent(
+                            kind="shard-timeout",
+                            where="collector",
+                            shard=i,
+                            attempt=attempts[i] - 1,
+                            wall_s=time.monotonic() - round_start,
+                            detail=(
+                                f"no result within "
+                                f"{policy.shard_timeout_s:.1f}s; "
+                                "worker killed, shard re-run in process"
+                            ),
+                        )
+                    )
+                    results[i] = self._run_shard_local(
+                        kernel, sampler, dynamic_context, bounds[i],
+                        budgets[i], i, events, resplit=policy.resplit,
+                    )
+                    remaining.discard(i)
+            if broken:
+                pool_failures += 1
+                self._kill_pool()
+                if remaining and pool_failures < policy.max_pool_failures:
+                    events.append(
+                        FaultEvent(
+                            kind="pool-rebuild",
+                            where="collector",
+                            detail=(
+                                f"respawning {self.workers} workers "
+                                f"(consecutive failure {pool_failures})"
+                            ),
+                        )
+                    )
+                    time.sleep(policy.backoff_s(pool_failures))
+            else:
+                if retry_backoff:
+                    time.sleep(retry_backoff)
+                if remaining:
+                    pool_failures = 0  # progress without breakage: reset
+        return results
+
+    def _run_shard_local(
+        self,
+        kernel: KernelSpec,
+        sampler: GridSampler,
+        dynamic_context: Optional[Dict[str, np.ndarray]],
+        bound: Tuple[int, int],
+        budget: int,
+        shard: int,
+        events: List[FaultEvent],
+        resplit: int = 1,
+    ) -> List[Tuple[TraceBuffer, ShardInfo]]:
+        """Re-run one shard in process, optionally re-split.
+
+        Sub-runs keep the shard's id and partition its ``[lo, hi)``
+        exactly, so group-token unification and the merge algebra are
+        unaffected; the globally-first sub-run (``lo == 0``) owns
+        ``once=`` operands automatically (``collect_shard`` derives
+        ownership from the global ``lo``).  Injected directives never
+        reach this path — the in-process re-run is the recovery, so it
+        must be clean by construction.
+        """
+        from ..runtime.fault import retry as _retry
+
+        lo, hi = bound
+        k = max(1, min(int(resplit), max(hi - lo, 1)))
+        pieces = [(lo + a, lo + b) for a, b in shard_bounds(hi - lo, k)]
+        if len(pieces) > 1:
+            events.append(
+                FaultEvent(
+                    kind="shard-resplit",
+                    where="collector",
+                    shard=shard,
+                    detail=(
+                        f"re-running [{lo}:{hi}) in process as "
+                        f"{len(pieces)} smaller runs"
+                    ),
+                )
+            )
+        sub_budgets = split_budget(budget, len(pieces))
+        out: List[Tuple[TraceBuffer, ShardInfo]] = []
+        for j, (plo, phi) in enumerate(pieces):
+            def _run(plo=plo, phi=phi, j=j):
+                return collect_shard(
+                    kernel, sampler, dynamic_context, plo, phi, shard,
+                    sub_budgets[j],
+                )
+
+            def _note(attempt, exc):
+                events.append(
+                    FaultEvent(
+                        kind="shard-retry",
+                        where="collector",
+                        shard=shard,
+                        attempt=attempt,
+                        detail=(
+                            f"in-process re-run: "
+                            f"{type(exc).__name__}: {exc}"
+                        )[:200],
+                    )
+                )
+
+            out.append(
+                _retry(
+                    _run,
+                    attempts=self.policy.attempts,
+                    base_delay=self.policy.base_delay,
+                    retryable=(Exception,),
+                    on_retry=_note,
+                )()
+            )
+        return out
 
     def analyze(
         self,
@@ -814,9 +1188,10 @@ class ShardedCollector:
 
         Bit-identical to :func:`analyze` on the same arguments for any
         trace within the record cap (pinned by the golden-equivalence
-        suite), with per-shard provenance in ``Heatmap.shards``.  When
-        the cap bites, drop *totals* stay exact (each drop is counted
-        in exactly one shard) but the surviving record set differs from
+        suite), with per-shard provenance in ``Heatmap.shards`` and
+        any recovery provenance in ``Heatmap.faults``.  When the cap
+        bites, drop *totals* stay exact (each drop is counted in
+        exactly one shard) but the surviving record set differs from
         serial truncation — a RuntimeWarning flags it.
         """
         sampler = sampler or GridSampler()
@@ -836,7 +1211,9 @@ class ShardedCollector:
         an = Analyzer(kernel.name, kernel.grid, sampler.describe())
         for buf in bufs:
             an.ingest(buf)
-        return dataclasses.replace(an.flush(), shards=infos)
+        return dataclasses.replace(
+            an.flush(), shards=infos, faults=self.last_fault_events
+        )
 
 
 def analyze_sharded(

@@ -30,6 +30,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .resilience import FaultEvent
 from .tiles import TileGeometry
 from .trace import (
     AccessRecord,
@@ -363,9 +364,13 @@ class Heatmap:
 
     ``shards`` is collection provenance: one :class:`ShardInfo` per
     worker shard when the trace was collected by a
-    ``ShardedCollector``, empty for a single-pass build.  Provenance is
-    deliberately excluded from heat-map equality (`heatmaps_equal`):
-    a sharded build IS the serial build, just produced differently.
+    ``ShardedCollector``, empty for a single-pass build.  ``faults`` is
+    recovery provenance: one :class:`FaultEvent` per recovery action
+    the collection survived (worker crash, hung-shard watchdog, pool
+    rebuild, ... — empty for a clean run).  Both are deliberately
+    excluded from heat-map equality (`heatmaps_equal`): a sharded or
+    recovered build IS the serial clean build, just produced
+    differently.
     """
 
     kernel: str
@@ -375,6 +380,7 @@ class Heatmap:
     n_records: int
     dropped: int
     shards: Tuple[ShardInfo, ...] = ()
+    faults: Tuple[FaultEvent, ...] = ()
 
     def region(self, name: str) -> RegionHeatmap:
         for r in self.regions:
@@ -425,6 +431,7 @@ class Heatmap:
             n_records=self.n_records + other.n_records,
             dropped=self.dropped + other.dropped,
             shards=self.shards + other.shards,
+            faults=self.faults + other.faults,
         )
 
     # -- transaction model --------------------------------------------------
@@ -494,6 +501,7 @@ class Heatmap:
             "n_records": self.n_records,
             "dropped": self.dropped,
             "shards": [s.as_dict() for s in self.shards],
+            "faults": [e.as_dict() for e in self.faults],
             "transactions": self.sector_transactions(),
             "demanded_words": self.useful_word_transactions(),
             "waste_ratio": self.waste_ratio(),

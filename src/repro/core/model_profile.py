@@ -45,6 +45,8 @@ from __future__ import annotations
 import contextlib
 import contextvars
 import dataclasses
+import json
+import os
 from pathlib import Path
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
@@ -55,13 +57,16 @@ from repro.core.session import (
     Iteration,
     ProfileSession,
     ProfiledKernel,
+    load_iteration,
     profile_kernel,
 )
 from repro.core.trace import GridSampler
+from repro.runtime.fault import Preempted
 
 __all__ = [
     "DiscoveredKernel",
     "KernelCall",
+    "MODEL_JOURNAL",
     "bwd_spec",
     "discover",
     "hlo_sweep",
@@ -71,6 +76,10 @@ __all__ = [
     "layers_table",
     "profile_model",
 ]
+
+#: Name of the resumable-run journal ``profile_model`` keeps at the
+#: session root while a whole-model profile is in flight.
+MODEL_JOURNAL = "model.journal.json"
 
 
 # ---------------------------------------------------------------------------
@@ -383,6 +392,48 @@ def iteration_transactions(it: Iteration) -> int:
     return sum(pk.transactions for pk in it.kernels)
 
 
+def _commit_journal(path: Path, journal: Dict) -> None:
+    """Atomically (re)write the model-run journal (temp + rename)."""
+    tmp = path.with_name(path.name + ".tmp")
+    tmp.write_text(json.dumps(journal, indent=2) + "\n")
+    os.replace(tmp, path)
+
+
+def _load_partial(sess: ProfileSession, name: str, overrides, backward):
+    """Validate a resume journal and load its partial iteration's kernels.
+
+    Returns ``{kernel name: ProfiledKernel}`` of the work the preempted
+    run already flushed (empty when it was preempted before any kernel
+    finished).  Raises ``ValueError`` — the CLI's exit-2 class — when
+    there is nothing to resume or the journaled run does not match the
+    requested one (resuming a different model would silently splice
+    foreign heat maps into the iteration).
+    """
+    jpath = sess.root / MODEL_JOURNAL
+    if not jpath.is_file():
+        raise ValueError(
+            f"{sess.root}: nothing to resume (no {MODEL_JOURNAL}; the "
+            "previous run either completed or never started)"
+        )
+    try:
+        journal = json.loads(jpath.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        raise ValueError(f"{jpath}: unreadable model journal ({e})") from e
+    want = {"model": name, "overrides": list(overrides),
+            "backward": bool(backward)}
+    got = {k: journal.get(k) for k in want}
+    if journal.get("format") != "cuthermo-model-journal" or got != want:
+        raise ValueError(
+            f"{jpath}: journaled run {got} does not match the requested "
+            f"run {want}; re-run without --resume to start over"
+        )
+    partial = journal.get("partial")
+    if not partial:
+        return {}
+    it = load_iteration(sess.root / partial)
+    return {pk.name: pk for pk in it.kernels}
+
+
 def profile_model(
     name: str,
     out: Union[str, Path],
@@ -395,6 +446,9 @@ def profile_model(
     label: Optional[str] = None,
     note: str = "",
     hlo: bool = True,
+    fault_plan=None,
+    preemption=None,
+    resume: bool = False,
 ) -> Iteration:
     """Profile one registered model into a session iteration (v5 artifact).
 
@@ -406,8 +460,22 @@ def profile_model(
     attribution table.  Returns the loaded :class:`Iteration` (its
     ``.layers`` carries the table).
 
+    The run is preemption-safe: a journal (:data:`MODEL_JOURNAL`) lives
+    at the session root while the profile is in flight, and when
+    ``preemption`` (e.g. a :class:`repro.runtime.fault.PreemptionHandler`)
+    reports ``requested`` between kernels, the kernels profiled so far
+    are flushed as an emergency *partial* iteration, the journal records
+    it, and :class:`~repro.runtime.fault.Preempted` is raised.
+    ``resume=True`` picks such a run back up: the journal is validated
+    against the requested arguments, the partial iteration's kernels are
+    reused verbatim, and only the remainder is profiled — the final
+    iteration is identical to an uninterrupted run's (heat-map writes
+    are byte-deterministic).  ``fault_plan`` threads deterministic
+    fault injection into the sharded collectors (``--inject-faults``).
+
     Raises ``KeyError`` for an unknown model and ``ValueError`` for a
-    malformed ``--config`` override (the CLI maps both to exit 2).
+    malformed ``--config`` override or an invalid resume (the CLI maps
+    both to exit 2).
     """
     from repro.models.registry import apply_overrides, get_model
 
@@ -419,20 +487,60 @@ def profile_model(
         name, cfg, batch, seq, backward=backward,
         default_shapes=default_shapes,
     )
-    with ProfileSession(out, workers=workers, cache=cache) as sess:
+    with ProfileSession(
+        out, workers=workers, cache=cache, fault_plan=fault_plan
+    ) as sess:
+        done: Dict[str, ProfiledKernel] = (
+            _load_partial(sess, name, overrides, backward) if resume else {}
+        )
+        journal: Dict[str, object] = {
+            "format": "cuthermo-model-journal",
+            "version": 1,
+            "model": name,
+            "overrides": list(overrides),
+            "backward": bool(backward),
+            "partial": None,
+        }
+        jpath = sess.root / MODEL_JOURNAL
+        _commit_journal(jpath, journal)
         collector = sess.collector()
-        profiled = [
-            profile_kernel(
-                d.spec,
-                sampler or GridSampler(None),
-                None,
-                name=d.name,
-                variant=f"{d.family}:{'bwd' if d.backward else 'fwd'}",
-                collector=collector,
-                cache=sess.cache,
+        profiled: List[ProfiledKernel] = []
+        for d in discovered:
+            if d.name in done:
+                profiled.append(done[d.name])
+                continue
+            if preemption is not None and getattr(
+                preemption, "requested", False
+            ):
+                # flush what we have as an emergency partial iteration so
+                # --resume only pays for the remainder
+                if profiled:
+                    it = sess.add_iteration(
+                        profiled,
+                        label=f"model-{name}-partial",
+                        note=(
+                            f"preempted after {len(profiled)}/"
+                            f"{len(discovered)} kernels; resumable"
+                        ),
+                    )
+                    journal["partial"] = it.path.name
+                    _commit_journal(jpath, journal)
+                raise Preempted(
+                    f"model profile of {name} preempted after "
+                    f"{len(profiled)}/{len(discovered)} kernels; "
+                    "resume with --resume"
+                )
+            profiled.append(
+                profile_kernel(
+                    d.spec,
+                    sampler or GridSampler(None),
+                    None,
+                    name=d.name,
+                    variant=f"{d.family}:{'bwd' if d.backward else 'fwd'}",
+                    collector=collector,
+                    cache=sess.cache,
+                )
             )
-            for d in discovered
-        ]
         layers: Dict[str, object] = {
             "model": name,
             "batch": batch,
@@ -442,9 +550,11 @@ def profile_model(
         }
         if hlo:
             layers["hlo"] = hlo_sweep(cfg, batch, seq, backward=backward)
-        return sess.add_iteration(
+        it = sess.add_iteration(
             profiled,
             label=label or f"model-{name}",
             note=note or f"whole-model profile of {name}",
             layers=layers,
         )
+        jpath.unlink(missing_ok=True)
+        return it

@@ -624,6 +624,69 @@ def _lint_section_markdown(lint: Sequence[Mapping]) -> List[str]:
     return lines
 
 
+def _faults_section_html(faults: Sequence[Mapping]) -> str:
+    """Recovered-fault provenance section of the HTML bundle (artifact v6).
+
+    ``faults`` is the iteration manifest's top-level ``faults`` block:
+    one dict per recorded ``FaultEvent`` (kind, shard, attempt, wall
+    time, detail), stamped with the kernel it was collected under.  The
+    section exists so a bundle reader can tell a clean run from one
+    that survived worker crashes, hung shards, or corrupt cache entries
+    — the merged heat maps are bit-identical either way, which is the
+    point.
+    """
+    if not faults:
+        return ""
+    parts = [
+        "<h3>fault recovery</h3>",
+        "<p class='evidence'>faults recovered during collection; every "
+        "recovery re-executed the affected shards, so the merged heat "
+        "maps are bit-identical to a fault-free run.</p>",
+        "<table><tr><th>kernel</th><th>kind</th><th>where</th>"
+        "<th>shard</th><th>attempt</th><th>wall</th><th>detail</th></tr>",
+    ]
+    for f in faults:
+        shard = f.get("shard", -1)
+        parts.append(
+            f"<tr><td>{_html.escape(str(f.get('kernel', '')))}</td>"
+            f"<td class='verdict-regressed'>"
+            f"{_html.escape(str(f.get('kind', '?')))}</td>"
+            f"<td>{_html.escape(str(f.get('where', '')))}</td>"
+            f"<td>{'&mdash;' if shard < 0 else shard}</td>"
+            f"<td>{f.get('attempt', 0)}</td>"
+            f"<td>{float(f.get('wall_s', 0.0)) * 1e3:.0f} ms</td>"
+            f"<td>{_html.escape(str(f.get('detail', '')))}</td></tr>"
+        )
+    parts.append("</table>")
+    return "".join(parts)
+
+
+def _faults_section_markdown(faults: Sequence[Mapping]) -> List[str]:
+    """Markdown lines of the recovered-fault provenance section."""
+    if not faults:
+        return []
+    lines = [
+        "",
+        f"## fault recovery — {len(faults)} event(s)",
+        "",
+        "every recovery re-executed the affected shards; the merged "
+        "heat maps are bit-identical to a fault-free run.",
+        "",
+        "| kernel | kind | where | shard | attempt | wall | detail |",
+        "|---|---|---|---:|---:|---:|---|",
+    ]
+    for f in faults:
+        shard = f.get("shard", -1)
+        lines.append(
+            f"| {f.get('kernel', '')} | {f.get('kind', '?')} "
+            f"| {f.get('where', '')} | {'—' if shard < 0 else shard} "
+            f"| {f.get('attempt', 0)} "
+            f"| {float(f.get('wall_s', 0.0)) * 1e3:.0f} ms "
+            f"| {f.get('detail', '')} |"
+        )
+    return lines
+
+
 def _layers_section_html(layers: Mapping) -> str:
     """Per-layer attribution section of the HTML bundle (artifact v5).
 
@@ -746,6 +809,7 @@ def render_session_html(
     check: Optional[Mapping] = None,
     lint: Optional[Sequence[Mapping]] = None,
     layers: Optional[Mapping] = None,
+    faults: Optional[Sequence[Mapping]] = None,
 ) -> str:
     """Self-contained HTML gallery for one profiled iteration.
 
@@ -793,6 +857,8 @@ def render_session_html(
         parts.append(chart)
     if layers:
         parts.append(_layers_section_html(layers))
+    if faults:
+        parts.append(_faults_section_html(faults))
     if check:
         parts.append(_check_section_html(check))
     if lint:
@@ -897,6 +963,7 @@ def render_session_markdown(
     check: Optional[Mapping] = None,
     lint: Optional[Sequence[Mapping]] = None,
     layers: Optional[Mapping] = None,
+    faults: Optional[Sequence[Mapping]] = None,
 ) -> str:
     """Markdown digest of one iteration (the commit-message artifact)."""
     lines = [f"# {title}", ""]
@@ -948,6 +1015,8 @@ def render_session_markdown(
             )
     if layers:
         lines += _layers_section_markdown(layers)
+    if faults:
+        lines += _faults_section_markdown(faults)
     if check:
         lines += _check_section_markdown(check)
     if lint:
@@ -966,6 +1035,7 @@ def write_report_bundle(
     check: Optional[Mapping] = None,
     lint: Optional[Sequence[Mapping]] = None,
     layers: Optional[Mapping] = None,
+    faults: Optional[Sequence[Mapping]] = None,
 ) -> Dict[str, str]:
     """Write a whole-iteration report bundle into ``out_dir``.
 
@@ -977,7 +1047,9 @@ def write_report_bundle(
     regression-gate verdict; ``lint`` (per-kernel predicted-vs-observed
     dicts, see ``_lint_section_html``) adds the static-lint cross-tab;
     ``layers`` (an artifact-v5 per-layer attribution mapping, see
-    ``cuthermo model``) adds the per-layer rollup table.
+    ``cuthermo model``) adds the per-layer rollup table; ``faults``
+    (an artifact-v6 recovered-fault block, one dict per ``FaultEvent``)
+    adds the fault-recovery provenance table.
     Returns a name->path mapping of everything written.
     """
     os.makedirs(out_dir, exist_ok=True)
@@ -987,7 +1059,7 @@ def write_report_bundle(
         f.write(
             render_session_html(
                 entries, title=title, tuning=tuning, check=check,
-                lint=lint, layers=layers,
+                lint=lint, layers=layers, faults=faults,
             )
         )
     written["index.html"] = index
@@ -996,7 +1068,7 @@ def write_report_bundle(
         f.write(
             render_session_markdown(
                 entries, title=title, tuning=tuning, check=check,
-                lint=lint, layers=layers,
+                lint=lint, layers=layers, faults=faults,
             )
         )
     written["report.md"] = md

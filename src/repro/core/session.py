@@ -22,18 +22,26 @@ first-class, on-disk object:
 Layout on disk (see ``docs/file-format.md``)::
 
     sess/
-      session.json          # {"format": "cuthermo-session", "version": 5,
+      session.json          # {"format": "cuthermo-session", "version": 6,
                             #  "iterations": ["iter0", "iter1"]}
       iter0/
         manifest.json       # version stamp + per-kernel metadata
         gemm.npz            # r{i}_tags / r{i}_word_temps / r{i}_sector_temps
       iter1/ ...
+
+Writes are *crash safe*: every file of an iteration is committed
+atomically (temp + fsync + rename) under a journal sidecar, so a kill
+at any instant leaves either a complete iteration, a completable one
+(everything durable, only the final manifest rename missing), or a torn
+one that :meth:`ProfileSession.recover` quarantines — never a directory
+that half-loads.  See ``docs/robustness.md``.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import json
+import os
 import re
 import time
 from pathlib import Path
@@ -48,6 +56,7 @@ from .diff import HeatmapDiff, diff as diff_heatmaps
 from .heatmap import Heatmap, RegionHeatmap
 from .patterns import PatternReport, detect_all
 from .render import dedupe_stem, slugify
+from .resilience import FaultEvent
 from .tiles import TileGeometry
 from .trace import GridSampler, RegionInfo, ShardInfo
 
@@ -85,14 +94,25 @@ from .trace import GridSampler, RegionInfo, ShardInfo
 #:     iteration total by construction.  Backward compatible on read:
 #:     v1-v4 artifacts load with ``Iteration.layers`` = None (layer
 #:     attribution absent, not an error).
-ARTIFACT_VERSION = 5
+#: v6  (fault tolerance) adds recovery provenance: each kernel's
+#:     heatmap metadata gains a "faults" list (structured FaultEvent
+#:     records of every recovery the collection performed — worker
+#:     crashes survived, hung shards expired, retries, pool rebuilds),
+#:     and iterations whose collections recovered carry a top-level
+#:     "faults" block ([{... , "kernel": name}, ...]) so manifest-only
+#:     consumers can see at a glance that a run was degraded.  Fault
+#:     events are provenance, not state: a recovered heat map is
+#:     bit-identical to the clean one (set-union merge algebra) and
+#:     equality/diff ignore them.  Backward compatible on read: v1-v5
+#:     artifacts load with empty fault provenance.
+ARTIFACT_VERSION = 6
 
 #: Versions this build can load.  v1 lacks shard provenance, v2 lacks
 #: tuning provenance, v3 lacks the scratch_words manifest metric, v4
-#: lacks per-layer attribution; all are otherwise identical and load
-#: with the missing fields empty.  Writers always stamp
-#: ARTIFACT_VERSION.
-SUPPORTED_VERSIONS = (1, 2, 3, 4, 5)
+#: lacks per-layer attribution, v5 lacks fault provenance; all are
+#: otherwise identical and load with the missing fields empty.  Writers
+#: always stamp ARTIFACT_VERSION.
+SUPPORTED_VERSIONS = (1, 2, 3, 4, 5, 6)
 
 SESSION_FORMAT = "cuthermo-session"
 ITERATION_FORMAT = "cuthermo-iteration"
@@ -123,6 +143,8 @@ def heatmap_to_arrays(hm: Heatmap) -> Tuple[dict, Dict[str, np.ndarray]]:
         "dropped": hm.dropped,
         # per-shard collection provenance (v2; empty for serial builds)
         "shards": [s.as_dict() for s in hm.shards],
+        # recovery provenance (v6; empty for clean collections)
+        "faults": [e.as_dict() for e in hm.faults],
         "regions": [],
     }
     arrays: Dict[str, np.ndarray] = {}
@@ -176,6 +198,10 @@ def arrays_to_heatmap(meta: Mapping, arrays: Mapping[str, np.ndarray]) -> Heatma
         # v1 manifests carry no shard provenance: loads as unsharded
         shards=tuple(
             ShardInfo.from_dict(d) for d in meta.get("shards", [])
+        ),
+        # pre-v6 manifests carry no fault provenance: loads as clean
+        faults=tuple(
+            FaultEvent.from_dict(d) for d in meta.get("faults", [])
         ),
     )
 
@@ -342,6 +368,10 @@ class Iteration:
     # v5 per-layer attribution (None when the iteration was not written
     # by whole-model profiling, and for every pre-v5 artifact)
     layers: Optional[Mapping] = None
+    # v6 recovery provenance: the manifest's top-level "faults" block —
+    # one entry per FaultEvent with the owning kernel's name attached
+    # (empty for clean collections and every pre-v6 artifact)
+    faults: Tuple[Mapping, ...] = ()
 
     def kernel(self, name: str) -> ProfiledKernel:
         """Look up one profiled kernel by manifest name."""
@@ -563,6 +593,64 @@ def _validate_layers(
         )
 
 
+#: Name of the write-in-progress journal sidecar inside an iteration
+#: directory.  It exists from the first byte of an iteration write to
+#: after the manifest commit; a directory holding one was torn by a
+#: crash (or is being written right now by another process) and is the
+#: input to :meth:`ProfileSession.recover`.
+JOURNAL_NAME = ".journal.json"
+
+#: Hooks called around every atomic file commit of an iteration write:
+#: ``hook(path, event)`` with ``event`` = ``"staged"`` (the temp file is
+#: durable, the rename has not happened) or ``"committed"`` (renamed
+#: into place).  The fault-injection harness installs
+#: :class:`repro.core.faultinject.WriteKillPoint` here to model
+#: ``kill -9`` at exact points of the commit sequence; production code
+#: leaves the list empty.
+_write_commit_hooks: List = []
+
+
+def _notify_hooks(path: Path, event: str) -> None:
+    for hook in list(_write_commit_hooks):
+        hook(path, event)
+
+
+def _commit_bytes(path: Path, data: bytes, *, notify: bool = True) -> None:
+    """Atomically commit ``data`` at ``path`` (temp + fsync + rename).
+
+    After this returns, ``path`` holds the complete new content; if the
+    process dies at any instant, ``path`` holds either its complete old
+    content or nothing — never a prefix.  The temp file is
+    ``<name>.tmp`` *in the same directory* (rename must not cross
+    filesystems), which is what :meth:`ProfileSession.recover` looks
+    for when completing a write that died between fsync and rename.
+    """
+    tmp = path.with_name(path.name + ".tmp")
+    with open(tmp, "wb") as f:
+        f.write(data)
+        f.flush()
+        os.fsync(f.fileno())
+    if notify:
+        _notify_hooks(path, "staged")
+    os.replace(tmp, path)
+    if notify:
+        _notify_hooks(path, "committed")
+
+
+def _commit_json(path: Path, obj: Mapping, *, notify: bool = True) -> None:
+    _commit_bytes(
+        path, json.dumps(obj, indent=2).encode("utf-8"), notify=notify
+    )
+
+
+def _commit_npz(path: Path, arrays: Mapping[str, np.ndarray]) -> None:
+    import io
+
+    buf = io.BytesIO()
+    np.savez_compressed(buf, **arrays)
+    _commit_bytes(path, buf.getvalue())
+
+
 def write_iteration(
     path: Union[str, Path],
     kernels: Sequence[ProfiledKernel],
@@ -589,6 +677,15 @@ def write_iteration(
     optional v5 per-layer attribution mapping; its table is validated
     as an exact partition of ``kernels`` (see :func:`_validate_layers`)
     and stored under the manifest's ``layers`` key.
+
+    The write is crash safe: a :data:`JOURNAL_NAME` sidecar is committed
+    first, every npz and the manifest are committed atomically (temp +
+    fsync + rename, manifest last), and the journal is removed only
+    after the manifest rename.  A kill at any instant therefore leaves
+    the journal pointing at a directory that
+    :meth:`ProfileSession.recover` can classify exactly: complete
+    (journal removal lost), completable (all content durable, manifest
+    rename lost), or torn (quarantine).
     """
     path = Path(path)
     if layers is not None:
@@ -603,14 +700,25 @@ def write_iteration(
         )
     path.mkdir(parents=True, exist_ok=True)
     label = label or path.name
-    entries = []
+    # plan the write up front so the journal can name every file the
+    # recovery pass should expect
     seen: Dict[str, int] = {}
-    for pk in kernels:
-        stem = dedupe_stem(slugify(pk.name), seen)
+    stems = [dedupe_stem(slugify(pk.name), seen) for pk in kernels]
+    journal = {
+        "format": "cuthermo-journal",
+        "version": ARTIFACT_VERSION,
+        "label": label,
+        "npz": [f"{stem}.npz" for stem in stems],
+    }
+    _commit_json(path / JOURNAL_NAME, journal, notify=False)
+    entries = []
+    fault_block: List[dict] = []
+    for stem, pk in zip(stems, kernels):
         meta, arrays = heatmap_to_arrays(pk.heatmap)
         npz_name = f"{stem}.npz"
-        with open(path / npz_name, "wb") as f:
-            np.savez_compressed(f, **arrays)
+        _commit_npz(path / npz_name, arrays)
+        for ev in pk.heatmap.faults:
+            fault_block.append(dict(ev.as_dict(), kernel=pk.name))
         entries.append(
             {
                 "name": pk.name,
@@ -638,12 +746,16 @@ def write_iteration(
         "created": time.time(),
         "kernels": entries,
     }
+    if fault_block:
+        # v6: manifest-only consumers see degraded runs without loading
+        # the per-kernel heatmap metadata
+        manifest["faults"] = fault_block
     if tuning is not None:
         manifest["tuning"] = dict(tuning)
     if layers is not None:
         manifest["layers"] = dict(layers)
-    with open(path / "manifest.json", "w") as f:
-        json.dump(manifest, f, indent=2)
+    _commit_json(path / "manifest.json", manifest)
+    (path / JOURNAL_NAME).unlink(missing_ok=True)
     return path
 
 
@@ -725,6 +837,8 @@ def load_iteration(path: Union[str, Path]) -> Iteration:
         tuning=manifest.get("tuning"),
         # pre-v5 manifests carry no layers key: attribution absent
         layers=manifest.get("layers"),
+        # pre-v6 manifests carry no faults block: clean collection
+        faults=tuple(manifest.get("faults", [])),
     )
 
 
@@ -825,6 +939,7 @@ class ProfileSession:
         create: bool = True,
         workers: int = 1,
         cache: Union[None, str, Path, CollectionCache] = None,
+        fault_plan=None,
     ):
         """Open (and by default create) the session at ``root``.
 
@@ -840,8 +955,13 @@ class ProfileSession:
         cache, or a directory path to create an on-disk one.  Unchanged
         kernels and repeated tuner candidates then return bit-identical
         cached heat maps instead of re-tracing.
+
+        ``fault_plan`` (a :class:`repro.core.faultinject.FaultPlan`)
+        threads deterministic fault injection into every sharded
+        collector this session creates — the ``--inject-faults`` wiring.
         """
         self.workers = max(1, int(workers))
+        self.fault_plan = fault_plan
         if cache is None or isinstance(cache, CollectionCache):
             self.cache = cache
         else:
@@ -887,7 +1007,7 @@ class ProfileSession:
         if self._collector is None or self._collector.workers != n:
             if self._collector is not None:
                 self._collector.close()
-            self._collector = ShardedCollector(n)
+            self._collector = ShardedCollector(n, fault_plan=self.fault_plan)
         return self._collector
 
     def close(self) -> None:
@@ -904,16 +1024,18 @@ class ProfileSession:
 
     # -- manifest ----------------------------------------------------------
     def _write_session_manifest(self, iterations: List[str]) -> None:
-        with open(self.root / "session.json", "w") as f:
-            json.dump(
-                {
-                    "format": SESSION_FORMAT,
-                    "version": ARTIFACT_VERSION,
-                    "iterations": iterations,
-                },
-                f,
-                indent=2,
-            )
+        # atomic for the same reason iteration files are: a kill during
+        # this write must not leave a half-written session.json that
+        # poisons every later open of the session
+        _commit_json(
+            self.root / "session.json",
+            {
+                "format": SESSION_FORMAT,
+                "version": ARTIFACT_VERSION,
+                "iterations": iterations,
+            },
+            notify=False,
+        )
 
     def iteration_names(self) -> List[str]:
         """Names of this session's iterations, ordered by iteration number."""
@@ -942,6 +1064,120 @@ class ProfileSession:
                 int(_ITER_RE.match(n).group(1)) if _ITER_RE.match(n) else -1,
                 n,
             ),
+        )
+
+    # -- crash recovery ----------------------------------------------------
+    def recover(self) -> List[FaultEvent]:
+        """Complete or quarantine iterations torn by a crash or kill.
+
+        Scans every ``iterN`` directory for the :data:`JOURNAL_NAME`
+        sidecar an interrupted :func:`write_iteration` leaves behind and
+        resolves each one exactly:
+
+        * journal present, manifest loads — the write finished and only
+          the journal removal was lost: the journal is removed.
+        * journal present, ``manifest.json.tmp`` durable and every npz
+          it references present — the write died between the manifest
+          fsync and its rename: the rename is performed and the
+          iteration **completed** (its content was already fully
+          durable, nothing is reconstructed).
+        * anything else — the iteration is torn beyond repair and is
+          moved to ``<root>/quarantine/`` where it cannot half-load,
+          freeing its ``iterN`` slot.
+
+        Returns one ``torn-iteration`` :class:`FaultEvent` per resolved
+        directory (empty when the session was clean).  NOT called
+        automatically on open: a journal is also what a *concurrently
+        running* writer looks like, so recovery is an explicit decision
+        of the CLI resume paths and of operators who know the session
+        is quiescent.
+        """
+        events: List[FaultEvent] = []
+        for d in sorted(self.root.iterdir()):
+            if not d.is_dir() or not _ITER_RE.match(d.name):
+                continue
+            jpath = d / JOURNAL_NAME
+            mpath = d / "manifest.json"
+            tpath = d / "manifest.json.tmp"
+            if not jpath.is_file():
+                if mpath.is_file():
+                    continue  # healthy (or pre-journal legacy): leave it
+                # claimed (mkdir) but killed before the journal commit:
+                # an empty husk wasting its slot
+                events.append(self._quarantine(d, "no journal, no manifest"))
+                continue
+            if mpath.is_file() and self._iteration_loads(d):
+                jpath.unlink(missing_ok=True)
+                self._sweep_tmps(d)
+                events.append(
+                    FaultEvent(
+                        kind="torn-iteration",
+                        where="session",
+                        detail=(
+                            f"{d.name}: write completed, journal removal "
+                            "lost; journal removed"
+                        ),
+                    )
+                )
+                continue
+            if tpath.is_file():
+                # the manifest temp was fsync'd before the rename, so if
+                # it parses and its npz files exist the iteration content
+                # is fully durable — finish the rename
+                try:
+                    manifest = json.loads(tpath.read_text())
+                    npz_ok = all(
+                        (d / e["npz"]).is_file()
+                        for e in manifest.get("kernels", [])
+                    )
+                except (OSError, json.JSONDecodeError, KeyError, TypeError):
+                    npz_ok = False
+                if npz_ok:
+                    os.replace(tpath, mpath)
+                    if self._iteration_loads(d):
+                        jpath.unlink(missing_ok=True)
+                        self._sweep_tmps(d)
+                        events.append(
+                            FaultEvent(
+                                kind="torn-iteration",
+                                where="session",
+                                detail=(
+                                    f"{d.name}: completed from durable "
+                                    "temp manifest"
+                                ),
+                            )
+                        )
+                        continue
+            events.append(self._quarantine(d, "torn write (incomplete)"))
+        self._write_session_manifest(self.iteration_names())
+        return events
+
+    @staticmethod
+    def _iteration_loads(d: Path) -> bool:
+        try:
+            load_iteration(d)
+            return True
+        except SessionError:
+            return False
+
+    @staticmethod
+    def _sweep_tmps(d: Path) -> None:
+        for tmp in d.glob("*.tmp"):
+            tmp.unlink(missing_ok=True)
+
+    def _quarantine(self, d: Path, why: str) -> FaultEvent:
+        qroot = self.root / "quarantine"
+        qroot.mkdir(exist_ok=True)
+        target = qroot / d.name
+        k = 1
+        while target.exists():
+            k += 1
+            target = qroot / f"{d.name}-{k}"
+        d.rename(target)
+        return FaultEvent(
+            kind="torn-iteration",
+            where="session",
+            detail=f"{d.name}: {why}; quarantined to {target.name}",
         )
 
     # -- profiling ---------------------------------------------------------
@@ -1152,6 +1388,7 @@ class ProfileSession:
 
 __all__ = [
     "ARTIFACT_VERSION",
+    "JOURNAL_NAME",
     "SUPPORTED_VERSIONS",
     "HistoryPoint",
     "Iteration",

@@ -40,12 +40,14 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..runtime.fault import Preempted
 from .advisor import Action
 from .cache import CollectionCache
 from .collector import KernelSpec, OperandSpec, ShardedCollector
 from .diff import HeatmapDiff, diff as diff_heatmaps
 from .heatmap import Heatmap
 from .lint import static_transactions
+from .resilience import FaultEvent
 from .session import (
     ProfiledKernel,
     ProfileSession,
@@ -560,6 +562,10 @@ class TuneResult:
     # candidates the static pre-screen proved worse and never profiled
     # (see _TuneLoop._prescreen); they consume no budget and no traces
     static_skipped: Tuple[dict, ...] = ()
+    # candidate-failure FaultEvents: candidates whose re-profile raised
+    # (collector gave up after its own recovery attempts).  They are
+    # skipped, never re-proposed, and do not abort the run.
+    faults: Tuple[FaultEvent, ...] = ()
 
     @property
     def speedup(self) -> float:
@@ -618,6 +624,7 @@ class TuneResult:
             "wall_s": self.wall_s,
             "steps": [s.as_dict() for s in self.steps],
             "static_skipped": list(self.static_skipped),
+            "faults": [e.as_dict() for e in self.faults],
         }
 
     def summary(self) -> str:
@@ -646,6 +653,13 @@ class TuneResult:
             lines.append(
                 f"  prescreen: {len(self.static_skipped)} candidate(s) "
                 f"statically worse, never traced ({labels})"
+            )
+        if self.faults:
+            lines.append(
+                f"  faults: {len(self.faults)} candidate profile(s) "
+                "failed and were skipped ("
+                + "; ".join(e.detail for e in self.faults)
+                + ")"
             )
         status = "converged" if self.converged else "budget exhausted"
         lines.append(
@@ -770,6 +784,9 @@ class _TuneLoop:
         self._pending_skips: List[dict] = []
         self._prebuilt: Dict[str, Tuple] = {}
         self._skipped_labels: set = set()
+        # candidate-failure provenance (profiles that raised and were
+        # skipped; see record_failure)
+        self.fault_events: List[FaultEvent] = []
 
     def _order_key(self, c: Candidate):
         if c.label not in self._jitter:
@@ -933,6 +950,31 @@ class _TuneLoop:
             return cand, cspec, cctx
         return None
 
+    def record_failure(self, cand: Candidate, exc: BaseException) -> None:
+        """Skip a candidate whose re-profile failed; keep tuning.
+
+        A profiling failure the collector could not recover from (its
+        own retry/rebuild/watchdog machinery has already run by the
+        time the exception reaches the tuner) must not abort the run:
+        the candidate is recorded as a ``candidate-failure``
+        :class:`~repro.core.resilience.FaultEvent`, its label joins the
+        skip set so a queue regeneration cannot re-propose it, and the
+        loop moves on without consuming budget (budget counts *judged*
+        candidates, exactly like build failures).
+        """
+        self.fault_events.append(
+            FaultEvent(
+                kind="candidate-failure",
+                where="tuner",
+                detail=(
+                    f"{self.entry.name}:{cand.label}: "
+                    f"{type(exc).__name__}: {exc}"
+                ),
+            )
+        )
+        self._skipped_labels.add(cand.label)
+        self.say(f"candidate {cand.label} failed to profile ({exc}) — skipped")
+
     def commit(
         self,
         cand: Candidate,
@@ -1038,6 +1080,7 @@ class _TuneLoop:
                 self.baseline_iter if self.session is not None else ""
             ),
             static_skipped=tuple(self.static_skipped),
+            faults=tuple(self.fault_events),
         )
 
 
@@ -1113,16 +1156,23 @@ def tune(
             if trial is None:
                 break
             cand, cspec, cctx = trial
-            pk = profile_kernel(
-                cspec,
-                loop.sampler,
-                cctx,
-                name=loop.entry.name,
-                variant=cand.label,
-                region_map=cand.region_map,
-                collector=collector,
-                cache=cache,
-            )
+            try:
+                pk = profile_kernel(
+                    cspec,
+                    loop.sampler,
+                    cctx,
+                    name=loop.entry.name,
+                    variant=cand.label,
+                    region_map=cand.region_map,
+                    collector=collector,
+                    cache=cache,
+                )
+            except Preempted:
+                raise
+            except Exception as e:
+                # a candidate that fails to profile is skipped, not fatal
+                loop.record_failure(cand, e)
+                continue
             loop.commit(cand, cspec, cctx, pk)
     finally:
         if own_collector and collector is not None:
@@ -1183,6 +1233,7 @@ def tune_all(
     cache: Optional["CollectionCache"] = None,
     progress: Optional[Callable[[str], None]] = None,
     max_threads: Optional[int] = None,
+    preemption=None,
 ) -> TuneAllResult:
     """Tune many families concurrently under ONE global candidate budget.
 
@@ -1206,6 +1257,18 @@ def tune_all(
     its unused share flows to the rest.  ``session`` iterations are
     committed sequentially in the scheduler thread, so iteration
     numbering is deterministic too.
+
+    A candidate whose profile raises is recorded as a
+    ``candidate-failure`` fault on its family's loop and skipped — one
+    broken candidate never aborts the whole schedule.  ``preemption``
+    (any object with a boolean ``requested`` attribute, e.g. a
+    :class:`repro.runtime.fault.PreemptionHandler`) is checked at every
+    round boundary: when set, the scheduler raises
+    :class:`~repro.runtime.fault.Preempted` *between* rounds, after the
+    in-flight round's iterations have durably committed — the session
+    is left resumable (``cuthermo tune --all --resume`` replays the
+    journaled run deterministically; completed profiles come back
+    bit-identical from the collection cache).
     """
     import concurrent.futures
 
@@ -1271,6 +1334,14 @@ def tune_all(
 
         active = list(loops)
         while active and spent < budget:
+            if preemption is not None and getattr(
+                preemption, "requested", False
+            ):
+                raise Preempted(
+                    f"tune --all preempted at a round boundary after "
+                    f"{rounds} round(s), {spent} candidate profile(s); "
+                    "committed iterations are durable — resume to replay"
+                )
             rounds += 1
             batch = []  # (loop, cand, spec, ctx)
             still = []
@@ -1293,7 +1364,15 @@ def tune_all(
             # ordered result commitment: profiling may finish in any
             # order, state only advances here, in family order
             for (loop, cand, cspec, cctx), fut in zip(batch, futs):
-                loop.commit(cand, cspec, cctx, fut.result())
+                try:
+                    pk = fut.result()
+                except Preempted:
+                    raise
+                except Exception as e:
+                    # one broken candidate must not abort the schedule
+                    loop.record_failure(cand, e)
+                    continue
+                loop.commit(cand, cspec, cctx, pk)
                 spent += 1
     finally:
         pool.shutdown()

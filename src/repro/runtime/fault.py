@@ -123,16 +123,26 @@ class StragglerMonitor:
 
 
 def retry(fn: Callable, attempts: int = 3, base_delay: float = 0.1,
-          retryable=(IOError, OSError)):
-    """Exponential-backoff retry wrapper."""
+          retryable=(IOError, OSError),
+          on_retry: Optional[Callable[[int, BaseException], None]] = None):
+    """Exponential-backoff retry wrapper.
+
+    ``on_retry(attempt, exc)`` is called before each backoff sleep (with
+    the 1-based number of the attempt that just failed) — the hook the
+    profiling pipeline uses to record structured
+    :class:`~repro.core.resilience.FaultEvent` provenance for every
+    recovery instead of retrying silently.
+    """
 
     def wrapped(*args, **kwargs):
         for i in range(attempts):
             try:
                 return fn(*args, **kwargs)
-            except retryable:
+            except retryable as e:
                 if i == attempts - 1:
                     raise
+                if on_retry is not None:
+                    on_retry(i + 1, e)
                 time.sleep(base_delay * (2 ** i))
 
     return wrapped

@@ -1,7 +1,7 @@
 """Deterministic generator for the committed artifact-format fixtures.
 
-The golden artifacts under ``tests/fixtures/artifact-v{1..5}`` pin the
-v1–v5 *load paths*: back-compat is guaranteed by files an old writer
+The golden artifacts under ``tests/fixtures/artifact-v{1..6}`` pin the
+v1–v6 *load paths*: back-compat is guaranteed by files an old writer
 could have produced, not just by code that rewrites today's format.
 Each fixture is a tiny hand-built heat map (no kernel tracing, no jax)
 written with the current writer and then rewritten to the target
@@ -13,6 +13,8 @@ emitted:
 * v3 — shard provenance + tuning provenance, no scratch_words
 * v4 — v3 + the scratch_words metric, no layers attribution
 * v5 — v4 + per-layer attribution (the ``layers`` manifest block)
+* v6 — v5 + fault provenance (per-heatmap "faults" events and the
+  top-level manifest "faults" block of a recovered collection)
 
 Regenerate with ``python tests/fixtures/generate.py`` (from the repo
 root, with ``src`` on PYTHONPATH); ``test_artifact_compat.py`` also
@@ -28,6 +30,7 @@ from pathlib import Path
 import numpy as np
 
 from repro.core.heatmap import Heatmap, RegionHeatmap
+from repro.core.resilience import FaultEvent
 from repro.core.session import ProfiledKernel, write_iteration
 from repro.core.tiles import TileGeometry
 from repro.core.trace import RegionInfo, ShardInfo
@@ -109,7 +112,18 @@ def _region(name, space, word_temps, sector_temps):
     )
 
 
-def _heatmap(with_shards):
+#: Fault provenance of the v6 fixture: one crashed worker survived via
+#: a pool rebuild (wall_s pinned for determinism).
+V6_FAULTS = (
+    FaultEvent(kind="worker-crash", where="collector", shard=1,
+               attempt=0, wall_s=0.0,
+               detail="process pool broke (worker died)"),
+    FaultEvent(kind="pool-rebuild", where="collector",
+               detail="respawning 2 workers (consecutive failure 1)"),
+)
+
+
+def _heatmap(with_shards, with_faults=False):
     shards = (
         (
             ShardInfo(shard=0, lo=0, hi=2, programs=2, records=8,
@@ -132,6 +146,7 @@ def _heatmap(with_shards):
         n_records=16,
         dropped=0,
         shards=shards,
+        faults=V6_FAULTS if with_faults else (),
     )
 
 
@@ -143,6 +158,8 @@ def _rewrite_manifest(path, version, keep_tuning):
     manifest["created"] = 0.0  # determinism: fixtures carry no wallclock
     if not keep_tuning:
         manifest.pop("tuning", None)
+    if version < 6:
+        manifest.pop("faults", None)  # v6-only recovery provenance
     if version < 5:
         manifest.pop("layers", None)  # v5-only attribution block
     for entry in manifest["kernels"]:
@@ -150,18 +167,21 @@ def _rewrite_manifest(path, version, keep_tuning):
             entry.pop("scratch_words", None)  # v4+ metric
         if version < 2:
             entry["heatmap"].pop("shards", None)
+        if version < 6:
+            entry["heatmap"].pop("faults", None)
     mpath.write_text(json.dumps(manifest, indent=2) + "\n")
 
 
 def write_fixtures(dest):
-    """Write artifact-v1 … artifact-v5 under ``dest``; returns the paths."""
+    """Write artifact-v1 … artifact-v6 under ``dest``; returns the paths."""
     dest = Path(dest)
     out = []
-    for version in (1, 2, 3, 4, 5):
+    for version in (1, 2, 3, 4, 5, 6):
         pk = ProfiledKernel(
             name="golden",
             variant="v00",
-            heatmap=_heatmap(with_shards=version >= 2),
+            heatmap=_heatmap(with_shards=version >= 2,
+                             with_faults=version >= 6),
             reports=(),  # loaders recompute derived views from arrays
             actions=(),
             wall_s=0.0,

@@ -1,4 +1,4 @@
-"""Artifact back-compat pinned by committed v1–v5 golden fixtures.
+"""Artifact back-compat pinned by committed v1–v6 golden fixtures.
 
 The fixtures under ``tests/fixtures/artifact-v*`` are files an OLD
 writer could have produced (see ``tests/fixtures/generate.py``).  These
@@ -38,13 +38,13 @@ def _load_generator():
 def test_every_supported_version_has_a_fixture():
     # the current version is exercised by the live writer; every OLD
     # version must be pinned by a committed artifact
-    assert SUPPORTED_VERSIONS == (1, 2, 3, 4, 5)
-    assert ARTIFACT_VERSION == 5
+    assert SUPPORTED_VERSIONS == (1, 2, 3, 4, 5, 6)
+    assert ARTIFACT_VERSION == 6
     for version in SUPPORTED_VERSIONS:
         assert (FIXTURES / f"artifact-v{version}" / "manifest.json").is_file()
 
 
-@pytest.mark.parametrize("version", [1, 2, 3, 4, 5])
+@pytest.mark.parametrize("version", [1, 2, 3, 4, 5, 6])
 def test_fixture_loads_with_pinned_contents(version):
     it = load_iteration(FIXTURES / f"artifact-v{version}")
     assert it.label == f"golden-v{version}"
@@ -96,6 +96,30 @@ def test_pre_v5_fixtures_have_no_layers(version):
     # per-layer attribution block existed — never a fabricated table
     it = load_iteration(FIXTURES / f"artifact-v{version}")
     assert it.layers is None
+
+
+@pytest.mark.parametrize("version", [1, 2, 3, 4, 5])
+def test_pre_v6_fixtures_load_with_clean_fault_provenance(version):
+    # loaders must surface empty fault provenance for artifacts written
+    # before recovery events existed — absent, not an error
+    it = load_iteration(FIXTURES / f"artifact-v{version}")
+    assert it.faults == ()
+    assert it.kernels[0].heatmap.faults == ()
+
+
+def test_v6_fixture_carries_fault_provenance():
+    it = load_iteration(FIXTURES / "artifact-v6")
+    # the heatmap rides structured FaultEvents ...
+    events = it.kernels[0].heatmap.faults
+    assert [e.kind for e in events] == ["worker-crash", "pool-rebuild"]
+    assert events[0].shard == 1 and events[0].where == "collector"
+    # ... and the manifest-only top-level block names the owning kernel
+    assert [f["kind"] for f in it.faults] == ["worker-crash", "pool-rebuild"]
+    assert all(f["kernel"] == "golden" for f in it.faults)
+    # provenance is excluded from heat-map equality: the recovered map
+    # IS the clean map (here, the v5 fixture's identical temperatures)
+    clean = load_iteration(FIXTURES / "artifact-v5")
+    assert heatmaps_equal(it.kernels[0].heatmap, clean.kernels[0].heatmap)
 
 
 def test_v5_fixture_carries_layer_attribution():
@@ -155,7 +179,7 @@ def test_fixtures_match_generator(tmp_path):
     """
     gen = _load_generator()
     gen.write_fixtures(tmp_path)
-    for version in (1, 2, 3, 4, 5):
+    for version in (1, 2, 3, 4, 5, 6):
         fresh = load_iteration(tmp_path / f"artifact-v{version}")
         committed = load_iteration(FIXTURES / f"artifact-v{version}")
         assert heatmaps_equal(fresh.kernels[0].heatmap,

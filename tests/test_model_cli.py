@@ -4,7 +4,7 @@ The whole-model subcommand is CI surface (the model-smoke job drives
 it), so its 0/1/2 exit-code contract is pinned via subprocess like the
 other gates: 0 profiled (and under budget), 1 the ``--max-transfers``
 budget is blown, 2 unknown model / bad override.  The stored artifact
-must be a v5 iteration whose per-layer rollup sums to the iteration
+must be a current-version iteration whose per-layer rollup sums to the iteration
 total and round-trips bit-identically; ``--report`` must render the
 per-layer table.
 """
@@ -104,12 +104,13 @@ def test_model_exit_1_when_budget_blown(tmp_path):
     assert os.path.isdir(os.path.join(sess, "iter0"))
 
 
-def test_model_artifact_is_v5_with_exact_rollup(model_session):
+def test_model_artifact_carries_layers_with_exact_rollup(model_session):
     sess, _ = model_session
     manifest = json.loads(
         open(os.path.join(sess, "iter0", "manifest.json")).read()
     )
-    assert manifest["version"] == 5
+    # current artifact version (v6: layers block + fault provenance)
+    assert manifest["version"] == 6
     layers = manifest["layers"]
     assert layers["model"] == "mamba-tiny"
     rollup = sum(row["transactions"] for row in layers["table"])

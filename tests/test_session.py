@@ -210,20 +210,22 @@ def test_workers2_session_end_to_end_with_shard_provenance(tmp_path):
 
 
 def test_v1_artifact_still_loads(tmp_path):
-    """The v5 loader reads v1 artifacts (no shard or tuning provenance)."""
+    """The v6 loader reads v1 artifacts (no shard or tuning provenance)."""
     from repro.core.session import SUPPORTED_VERSIONS
 
-    assert 1 in SUPPORTED_VERSIONS and ARTIFACT_VERSION == 5
+    assert 1 in SUPPORTED_VERSIONS and ARTIFACT_VERSION == 6
     path = write_iteration(tmp_path / "iter0", [_profiled()])
     mpath = path / "manifest.json"
     manifest = json.loads(mpath.read_text())
     # rewrite as a faithful v1 artifact: old stamp, no shards/tuning/
-    # layers keys, no v4 scratch_words metric
+    # layers/faults keys, no v4 scratch_words metric
     manifest["version"] = 1
     manifest.pop("tuning", None)
     manifest.pop("layers", None)
+    manifest.pop("faults", None)
     for entry in manifest["kernels"]:
         entry["heatmap"].pop("shards", None)
+        entry["heatmap"].pop("faults", None)
         entry.pop("scratch_words", None)
     mpath.write_text(json.dumps(manifest))
     it = load_iteration(path)

@@ -259,6 +259,113 @@ def test_rebuild_rejects_stale_source():
         _collect_shard_task(task)
 
 
+# -- merge-algebra property: duplication/permutation invariance --------------
+#
+# The recovery loop leans on this: a re-executed shard (retry, pool
+# rebuild, watchdog resplit) contributes its key sets AGAIN, and the
+# union must not care.  Property: folding any shard sequence that
+# covers every shard at least once — duplicates and order arbitrary —
+# yields temperature state bit-identical to the serial full-grid build.
+# Runs under hypothesis when available, else a seeded deterministic
+# sweep (this container ships no hypothesis; no new deps).
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as hyp_st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+_N_SHARDS = 4
+
+
+@pytest.fixture(scope="module")
+def shard_maps():
+    from repro.core.collector import shard_bounds as _bounds
+
+    spec = _spec()
+    maps = []
+    for i, (lo, hi) in enumerate(_bounds(spec.grid[0], _N_SHARDS)):
+        buf, _ = collect_shard(spec, GridSampler(None), None, lo, hi, i)
+        an = Analyzer(spec.name, spec.grid, "full-grid")
+        an.ingest(buf)
+        maps.append(an.flush(keep_keys=True))
+    serial_buf, _ = collect(spec, GridSampler(None))
+    an = Analyzer(spec.name, spec.grid, "full-grid")
+    an.ingest(serial_buf)
+    return maps, an.flush(keep_keys=True)
+
+
+def _temps_equal(a, b):
+    """Bit-identity of temperature state only (n_records/shards differ
+    by construction when a shard is merged twice)."""
+    if a.region_names() != b.region_names():
+        return False
+    for ra, rb in zip(a.regions, b.regions):
+        if ra.n_programs != rb.n_programs:
+            return False
+        if not (
+            np.array_equal(ra.tags_array, rb.tags_array)
+            and np.array_equal(ra.word_temps_matrix, rb.word_temps_matrix)
+            and np.array_equal(ra.sector_temps_array, rb.sector_temps_array)
+        ):
+            return False
+    return True
+
+
+def _assert_fold_matches_serial(seq, shard_maps):
+    maps, serial = shard_maps
+    merged = maps[seq[0]]
+    for i in seq[1:]:
+        merged = merged.merge(maps[i])
+    assert _temps_equal(merged, serial), seq
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        seq=hyp_st.lists(
+            hyp_st.integers(0, _N_SHARDS - 1), min_size=_N_SHARDS,
+            max_size=3 * _N_SHARDS,
+        ).filter(lambda s: set(s) == set(range(_N_SHARDS)))
+    )
+    def test_merge_duplication_invariance_property(seq, shard_maps):
+        _assert_fold_matches_serial(seq, shard_maps)
+
+else:
+
+    @pytest.mark.parametrize("case", range(24))
+    def test_merge_duplication_invariance_property(case, shard_maps):
+        import random
+
+        rng = random.Random(case)
+        base = list(range(_N_SHARDS))
+        rng.shuffle(base)
+        extra = [
+            rng.randrange(_N_SHARDS)
+            for _ in range(rng.randrange(2 * _N_SHARDS + 1))
+        ]
+        seq = base + extra
+        rng.shuffle(seq)
+        _assert_fold_matches_serial(seq, shard_maps)
+
+
+def test_remerging_same_subset_twice_is_bit_identical(shard_maps):
+    """The exact resilient-collector shape: a subset lands, then lands
+    AGAIN (duplicated delivery after a presumed-lost shard)."""
+    maps, serial = shard_maps
+    once = maps[0]
+    for m in maps[1:]:
+        once = once.merge(m)
+    twice = once
+    for m in maps[:2]:  # re-deliver a subset on top of the full merge
+        twice = twice.merge(m)
+    assert _temps_equal(once, serial)
+    assert _temps_equal(twice, once)
+
+
 # -- the process pool (spawn) ------------------------------------------------
 
 

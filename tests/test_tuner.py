@@ -315,7 +315,7 @@ def test_tune_persists_trajectory_with_provenance(tmp_path):
     assert it1.tuning["verdict"] == res.steps[0].diff.verdict
     # the manifest stamps the current version and is JSON all the way down
     manifest = json.loads((it1.path / "manifest.json").read_text())
-    assert manifest["version"] == ARTIFACT_VERSION == 5
+    assert manifest["version"] == ARTIFACT_VERSION == 6
     assert manifest["tuning"]["candidate"]["label"] == cand["label"]
     # a later process recovers the whole trajectory from disk alone
     (traj,) = trajectories_from_session(
